@@ -1,0 +1,51 @@
+"""Paper Fig. 5 — peak loss-memory vs catalog size for
+CE / BCE⁺ / gBCE / CE⁻ / SCE (batch 64, 256 negatives, as in the paper).
+
+Reproduces the paper's two findings:
+  * below ~40K items, negative-sampling losses cost MORE than full CE
+    (the gathered negative-embedding term dominates);
+  * SCE stays cheapest at every catalog size.
+"""
+from __future__ import annotations
+
+from repro.core.losses import loss_peak_elements
+from repro.core.sce import SCEConfig
+
+MiB = 2**20
+CATALOGS = [3_000, 22_307, 32_434, 96_830, 137_039, 173_511, 1_000_000]
+BATCH, SEQ, D, NEGS = 64, 200, 64, 256
+
+
+def run():
+    n_pos = BATCH * SEQ
+    rows = []
+    for c in CATALOGS:
+        sce_cfg = SCEConfig.from_alpha_beta(n_pos, c, bucket_size_y=NEGS)
+        row = {"catalog": c}
+        for loss in ("ce", "bce_plus", "gbce", "ce_minus", "sce"):
+            elems = loss_peak_elements(
+                loss, n_pos, c, D, num_negatives=NEGS, cfg=sce_cfg
+            )
+            row[loss] = elems * 4 / MiB
+        rows.append(row)
+    # paper claims: CE < BCE+ for small catalogs; SCE smallest everywhere
+    small = rows[0]
+    derived = (
+        f"small_catalog_ce_vs_bce={small['ce']/small['bce_plus']:.2f} "
+        f"(paper: <1 below 40K items); "
+        f"sce_vs_ce_at_1M={rows[-1]['ce']/rows[-1]['sce']:.0f}x"
+    )
+    return rows, derived
+
+
+def main():
+    rows, derived = run()
+    print("catalog,ce_mib,bce_plus_mib,gbce_mib,ce_minus_mib,sce_mib")
+    for r in rows:
+        print(f"{r['catalog']},{r['ce']:.1f},{r['bce_plus']:.1f},"
+              f"{r['gbce']:.1f},{r['ce_minus']:.1f},{r['sce']:.1f}")
+    print(derived)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Shared benchmark harness: train SASRec on the synthetic catalog with a
+configurable loss, measure quality (unsampled NDCG/HR/COV), wall time,
+and the analytic loss-memory model (the paper's metric-memory axes).
+
+Every paper benchmark (Figs. 2–6, Tables 2–3) drives this with different
+grids. Scales are reduced to CPU-feasible sizes; the *relative* structure
+(loss ranking, memory ordering, Pareto shape) is what reproduces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.losses import loss_peak_elements, make_loss
+from repro.core.metrics import evaluate_seqrec
+from repro.core.sce import SCEConfig, sce_loss
+from repro.data import Cursor, SeqDataConfig, SequenceDataset
+from repro.models import sasrec
+from repro.optim import make_optimizer
+
+
+@dataclasses.dataclass
+class RunResult:
+    metrics: Dict[str, float]
+    train_time_s: float
+    loss_peak_elements: int
+    final_loss: float
+    aux_history: Optional[list] = None
+
+
+def make_sasrec_loss_fn(loss_name: str, sce_cfg=None, **loss_kwargs):
+    if loss_name == "sce":
+        def fn(x, y, t, valid_mask=None, key=None):
+            return sce_loss(
+                x, y, t, key=key, cfg=sce_cfg, valid_mask=valid_mask,
+                return_aux=True,
+            )
+        return fn
+    return make_loss(loss_name, **loss_kwargs)
+
+
+def train_sasrec(
+    *,
+    loss_name: str,
+    n_items: int = 2000,
+    d_model: int = 48,
+    seq_len: int = 50,
+    batch: int = 32,
+    steps: int = 150,
+    eval_users: int = 512,
+    sce_cfg: Optional[SCEConfig] = None,
+    seed: int = 0,
+    lr: float = 1e-3,
+    collect_aux: bool = False,
+    **loss_kwargs,
+) -> RunResult:
+    cfg = sasrec.SeqRecConfig(
+        n_items=n_items, max_len=seq_len, d_model=d_model,
+        n_layers=2, n_heads=2, dropout=0.0,
+    )
+    data = SequenceDataset(SeqDataConfig(
+        n_items=n_items, seq_len=seq_len, batch_size=batch,
+    ))
+    loss_fn = make_sasrec_loss_fn(loss_name, sce_cfg, **loss_kwargs)
+    opt_init, opt_update = make_optimizer("adamw", lr)
+
+    params = sasrec.init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = opt_init(params)
+
+    @jax.jit
+    def step_fn(params, opt_state, tokens, targets, valid, key):
+        def inner(p):
+            hidden = sasrec.forward(p, cfg, tokens)
+            x = hidden.reshape(-1, hidden.shape[-1])
+            y = sasrec.loss_catalog(p, cfg)
+            out = loss_fn(
+                x, y, targets.reshape(-1),
+                valid_mask=valid.reshape(-1), key=key,
+            )
+            loss, aux = out if isinstance(out, tuple) else (out, {})
+            return loss, aux
+
+        (loss, aux), grads = jax.value_and_grad(inner, has_aux=True)(params)
+        new_params, new_opt = opt_update(grads, opt_state, params)
+        return new_params, new_opt, loss, aux
+
+    cursor = Cursor(seed=seed)
+    key = jax.random.PRNGKey(seed + 1)
+    aux_hist = [] if collect_aux else None
+    final_loss = float("nan")
+    t0 = time.time()
+    for s in range(steps):
+        b, cursor = data.next_batch(cursor)
+        key, k = jax.random.split(key)
+        params, opt_state, loss, aux = step_fn(
+            params, opt_state,
+            jnp.asarray(b["tokens"]), jnp.asarray(b["targets"]),
+            jnp.asarray(b["valid"]), k,
+        )
+        if collect_aux and aux:
+            aux_hist.append({k2: float(v) for k2, v in aux.items()})
+        final_loss = float(loss)
+    train_time = time.time() - t0
+
+    # Held-out users (disjoint cursor stream, paper's temporal-split idea).
+    eval_data = SequenceDataset(SeqDataConfig(
+        n_items=n_items, seq_len=seq_len, batch_size=eval_users,
+    ))
+    eval_batch, _ = eval_data.eval_batch(Cursor(seed=seed))
+    metrics = evaluate_seqrec(params, cfg, eval_batch)
+
+    num_negs = loss_kwargs.get("num_negatives", 0)
+    peak = loss_peak_elements(
+        "sce" if loss_name == "sce" else loss_name,
+        batch * seq_len, n_items, d_model,
+        num_negatives=num_negs, cfg=sce_cfg,
+    )
+    return RunResult(
+        metrics=metrics,
+        train_time_s=train_time,
+        loss_peak_elements=peak,
+        final_loss=final_loss,
+        aux_history=aux_hist,
+    )

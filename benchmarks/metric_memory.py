@@ -1,0 +1,58 @@
+"""Paper Fig. 6 + Table 3 — the metric-memory-time trade-off: train
+SASRec with each loss (CE, BCE⁺, gBCE, CE⁻, SCE) under the same budget
+and compare unsampled NDCG/HR/COV, loss-memory and wall time.
+"""
+from __future__ import annotations
+
+from benchmarks.harness import train_sasrec
+from repro.core.sce import SCEConfig
+
+N_ITEMS, BATCH, SEQ, NEGS = 4000, 32, 50, 128
+
+
+def run(steps: int = 150):
+    n_pos = BATCH * SEQ
+    sce_cfg = SCEConfig.from_alpha_beta(n_pos, N_ITEMS, bucket_size_y=NEGS)
+    runs = {
+        "ce": {},
+        "bce_plus": {"num_negatives": NEGS},
+        "gbce": {"num_negatives": NEGS, "t": 0.75},
+        "ce_minus": {"num_negatives": NEGS},
+        "ce_inbatch": {},
+        "ce_pop": {"num_negatives": NEGS},
+        "rece": {"n_chunks": 16},
+        "sce": {"sce_cfg": sce_cfg},
+    }
+    rows = []
+    for loss, kw in runs.items():
+        res = train_sasrec(
+            loss_name=loss, n_items=N_ITEMS, batch=BATCH, seq_len=SEQ,
+            steps=steps, **kw,
+        )
+        rows.append({
+            "loss": loss,
+            "ndcg@10": res.metrics["ndcg@10"],
+            "hr@10": res.metrics["hr@10"],
+            "cov@10": res.metrics["cov@10"],
+            "mem_elems": res.loss_peak_elements,
+            "time_s": res.train_time_s,
+        })
+    by = {r["loss"]: r for r in rows}
+    derived = (
+        f"sce_vs_ce mem={by['ce']['mem_elems']/by['sce']['mem_elems']:.0f}x "
+        f"ndcg_ratio={by['sce']['ndcg@10']/max(by['ce']['ndcg@10'],1e-9):.2f}"
+    )
+    return rows, derived
+
+
+def main():
+    rows, derived = run()
+    print("loss,ndcg@10,hr@10,cov@10,mem_elems,time_s")
+    for r in rows:
+        print(f"{r['loss']},{r['ndcg@10']:.4f},{r['hr@10']:.4f},"
+              f"{r['cov@10']:.4f},{r['mem_elems']},{r['time_s']:.1f}")
+    print(derived)
+
+
+if __name__ == "__main__":
+    main()

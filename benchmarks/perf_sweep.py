@@ -1,0 +1,115 @@
+"""§Perf hillclimb driver — builds named VARIANTS of the three chosen
+cells (different SCE distribution mode, microbatching, serving sharding),
+lowers + compiles each, and records the roofline terms so the
+hypothesis → change → measure → validate log in EXPERIMENTS.md §Perf is
+reproducible.
+
+  PYTHONPATH=src python -m benchmarks.perf_sweep --cell gemma2_sce
+  PYTHONPATH=src python -m benchmarks.perf_sweep --all
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+PERF_DIR = os.path.join("results", "perf")
+
+# variant grids for the three hillclimbed cells --------------------------------
+SWEEPS = {
+    # 1. paper-representative: SCE distribution strategy on the biggest
+    #    dense vocab (gemma2, 256k items)
+    "gemma2_sce": [
+        ("gspmd_paper_literal", "gemma2-2b", "train_4k",
+         {"sce_mode": "gspmd"}),
+        ("exact_two_stage", "gemma2-2b", "train_4k",
+         {"sce_mode": "exact"}),
+        ("union_fused", "gemma2-2b", "train_4k",
+         {"sce_mode": "union"}),
+        ("union_by2048", "gemma2-2b", "train_4k",
+         {"sce_mode": "union", "bucket_size_y": 2048}),
+    ],
+    # 2. most collective-bound: deepseek prefill — drop FSDP weight
+    #    gathers on the serving path when TP-resident params fit
+    "deepseek_prefill": [
+        ("fsdp_weights_gathered", "deepseek-coder-33b", "prefill_32k",
+         {"serve_fsdp_threshold": 0}),
+        ("tp_resident_weights", "deepseek-coder-33b", "prefill_32k",
+         {"serve_fsdp_threshold": 8e9}),
+        ("seq_parallel", "deepseek-coder-33b", "prefill_32k",
+         {"serve_fsdp_threshold": 0, "seq_parallel": True}),
+        ("seq_parallel_tp_resident", "deepseek-coder-33b", "prefill_32k",
+         {"serve_fsdp_threshold": 8e9, "seq_parallel": True}),
+    ],
+    # 3. worst roofline fraction at scale: kimi-k2 train — expert-weight
+    #    HBM traffic vs activation memory via the microbatch knob
+    "kimi_microbatch": [
+        ("micro16", "kimi-k2-1t-a32b", "train_4k", {"n_micro": 16}),
+        ("micro8", "kimi-k2-1t-a32b", "train_4k", {"n_micro": 8}),
+        ("micro4", "kimi-k2-1t-a32b", "train_4k", {"n_micro": 4}),
+    ],
+}
+
+
+def run_variant(name, arch, shape, opts, mesh_kind="single"):
+    from repro.launch.cells import build_cell
+    from repro.launch.dryrun import collective_bytes
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, **opts)
+    compiled = cell.lower().compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text(), mesh.size)
+    mult = cell.meta.get("loop_multiplier", 1)
+    rec = {
+        "variant": name,
+        "arch": arch,
+        "shape": shape,
+        "opts": {k: v for k, v in opts.items()},
+        "loop_multiplier": mult,
+        "peak_gib": (mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+        / 2**30,
+        "flops_raw": cost.get("flops"),
+        "bytes_raw": cost.get("bytes accessed"),
+        "wire_bytes_raw": coll["total_bytes"],
+        "wire_per_op": coll["per_op_bytes"],
+        "coll_counts": coll["counts"],
+        "compile_s": round(time.time() - t0, 1),
+        "meta": cell.meta,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=sorted(SWEEPS))
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    targets = sorted(SWEEPS) if args.all else [args.cell]
+
+    os.makedirs(PERF_DIR, exist_ok=True)
+    for sweep in targets:
+        for name, arch, shape, opts in SWEEPS[sweep]:
+            try:
+                rec = run_variant(name, arch, shape, opts)
+            except Exception as e:  # noqa: BLE001
+                print(f"[FAIL] {sweep}/{name}: {e!r}")
+                continue
+            path = os.path.join(PERF_DIR, f"{sweep}__{name}.json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(
+                f"[ok] {sweep}/{name}: peak={rec['peak_gib']:.2f} GiB "
+                f"wire={rec['wire_bytes_raw']/2**20:.0f} MiB(raw) "
+                f"flops={rec['flops_raw']:.3g}(raw) ×{rec['loop_multiplier']} "
+                f"({rec['compile_s']}s)"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""§Roofline — derive the three roofline terms per (arch × shape × mesh)
+from the dry-run artifacts (results/dryrun/*.json):
+
+  compute_s    = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+  memory_s     = HLO_bytes / (chips × 819 GB/s HBM)
+  collective_s = wire_bytes / (chips × 1 link × 50 GB/s)
+
+cost_analysis() on the CPU backend reports the PER-DEVICE partitioned
+module, so chips=1 in the denominators (the numerators are already
+per-device); collective wire bytes from dryrun.collective_bytes are
+per-device too.
+
+Also reports MODEL_FLOPS = 6·N·D (dense train) / 6·N_active·D (MoE) and
+the usefulness ratio MODEL_FLOPS / (HLO_FLOPs × chips) — remat/redundancy
+waste shows up here.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e)
+HBM_BW = 819e9  # B/s / chip
+LINK_BW = 50e9  # B/s / link (ICI)
+
+RESULTS_DIR = os.path.join("results", "dryrun")
+
+
+def model_flops(rec: dict) -> Optional[float]:
+    meta = rec.get("meta", {})
+    tokens = meta.get("tokens_per_step")
+    params = meta.get("active_params") or meta.get("params")
+    if tokens and params and rec["shape"].startswith("train"):
+        return 6.0 * params * tokens
+    return None
+
+
+def loop_multiplier(rec: dict) -> int:
+    """XLA cost analysis counts while-loop bodies ONCE (verified on a
+    controlled scan — see EXPERIMENTS.md §Roofline). The correction is the
+    static trip product of the dominant loop nest, recorded per cell in
+    meta['loop_multiplier'] (recomputed here for older records)."""
+    m = rec.get("meta", {}).get("loop_multiplier")
+    if m:
+        return int(m)
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+
+    arch = get_arch(rec["arch"])
+    shape = arch.shape(rec["shape"])
+    dp = 32 if rec["mesh"] == "multi" else 16
+    if arch.family == "lm":
+        cfg = arch.make_config(shape.name)
+        if shape.kind == "train":
+            gb = shape.dims["global_batch"]
+            n_micro = max(1, min(arch.microbatches.get(shape.name, 1),
+                                 gb // dp))
+            return cfg.n_groups * n_micro
+        return cfg.n_groups
+    if arch.family == "seqrec":
+        cfg = arch.make_config(shape.name)
+        if shape.kind == "train":
+            gb = shape.dims["batch"]
+            n_micro = max(1, min(arch.microbatches.get(shape.name, 1),
+                                 gb // dp))
+            return cfg.n_layers * n_micro
+        if shape.kind == "serve":
+            return -(-max(1, shape.dims["batch"] // dp) // 2048)
+        return cfg.n_layers
+    if arch.family == "recsys":
+        if shape.kind == "retrieval":
+            return -(-shape.dims["n_candidates"] // 4096)
+        return 1
+    return 3  # schnet interaction scan
+
+
+def analyze(rec: dict) -> dict:
+    chips = rec["n_devices"]
+    mult = loop_multiplier(rec)
+    flops = (rec["cost"]["flops"] or 0.0) * mult
+    bytes_acc = (rec["cost"]["bytes_accessed"] or 0.0) * mult
+    wire = rec["collectives"]["total_bytes"] * mult
+
+    compute_s = flops / PEAK_FLOPS  # per-device numbers → chips=1
+    memory_s = bytes_acc / HBM_BW
+    collective_s = wire / LINK_BW
+    terms = {
+        "compute": compute_s, "memory": memory_s,
+        "collective": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    bound_s = terms[dominant]
+    mf = model_flops(rec)
+    useful = (mf / (flops * chips)) if (mf and flops) else None
+    # roofline fraction: time the dominant term says vs time if compute
+    # ran at peak — the score we hillclimb
+    frac = compute_s / bound_s if bound_s > 0 else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "loop_mult": mult,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "roofline_frac": frac,
+        "model_flops_ratio": useful,
+        "peak_gib": rec["memory"]["peak_bytes"] / 2**30,
+    }
+
+
+def load_all(mesh: str = "single") -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec["mesh"] != mesh:
+            continue
+        rows.append(analyze(rec))
+    return rows
+
+
+def run():
+    rows = load_all("single")
+    if not rows:
+        return [], "no dry-run artifacts — run repro.launch.dryrun first"
+    worst = min(
+        (r for r in rows if r["roofline_frac"] > 0),
+        key=lambda r: r["roofline_frac"],
+    )
+    coll = max(rows, key=lambda r: r["collective_s"])
+    derived = (
+        f"{len(rows)} cells; worst roofline_frac="
+        f"{worst['roofline_frac']:.3f} ({worst['arch']}×{worst['shape']}); "
+        f"most collective-bound: {coll['arch']}×{coll['shape']} "
+        f"({coll['collective_s']*1e3:.1f} ms wire)"
+    )
+    return rows, derived
+
+
+def main():
+    rows, derived = run()
+    print("arch,shape,mesh,loop_mult,compute_s,memory_s,collective_s,"
+          "dominant,roofline_frac,model_flops_ratio,peak_gib")
+    for r in rows:
+        mfr = (f"{r['model_flops_ratio']:.2f}"
+               if r["model_flops_ratio"] else "")
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{r['loop_mult']},"
+              f"{r['compute_s']:.4g},{r['memory_s']:.4g},"
+              f"{r['collective_s']:.4g},{r['dominant']},"
+              f"{r['roofline_frac']:.3f},{mfr},{r['peak_gib']:.2f}")
+    print(derived)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark orchestrator — one entry per paper table/figure plus the
+roofline and kernel benches. Prints ``name,seconds,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only mix_ablation
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _entry(name):
+    import importlib
+
+    mod = importlib.import_module(f"benchmarks.{name}")
+    return mod
+
+
+BENCHES = [
+    "memory_breakdown",   # paper Fig. 2
+    "catalog_memory",     # paper Fig. 5
+    "metric_memory",      # paper Fig. 6 + Table 3
+    "mix_ablation",       # paper Fig. 4 + Table 2
+    "pareto_alpha_beta",  # paper Fig. 3
+    "kernel_bench",       # (ours) fused-kernel traffic model
+    "roofline",           # (ours) §Roofline from dry-run artifacts
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    targets = args.only or BENCHES
+
+    print("benchmark,seconds,derived")
+    failures = []
+    for name in targets:
+        t0 = time.time()
+        try:
+            _, derived = _entry(name).run()
+            print(f"{name},{time.time()-t0:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"{name},{time.time()-t0:.1f},FAILED: {e!r}")
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

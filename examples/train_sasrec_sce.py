@@ -1,0 +1,115 @@
+"""End-to-end driver: train SASRec with the SCE loss on the synthetic
+Zipf-cluster catalog, with checkpoint/restart and unsampled evaluation —
+the paper's SASRec-SCE setup as a runnable script.
+
+A few hundred steps on CPU reach a clearly-above-popularity NDCG@10 on
+held-out users; pass --items/--steps/--batch to scale up.
+
+  PYTHONPATH=src python examples/train_sasrec_sce.py --steps 300
+  # kill it mid-run and re-run: it resumes from the last checkpoint
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.core.metrics import evaluate_seqrec
+from repro.core.sce import SCEConfig, sce_loss
+from repro.data import Cursor, SeqDataConfig, SequenceDataset
+from repro.models import sasrec
+from repro.optim import linear_warmup_cosine, make_optimizer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--items", type=int, default=5000)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq-len", type=int, default=50)
+    ap.add_argument("--d-model", type=int, default=64)
+    ap.add_argument("--b-y", type=int, default=128)
+    ap.add_argument("--no-mix", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/sasrec_sce_ckpt")
+    ap.add_argument("--eval-every", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = sasrec.SeqRecConfig(
+        n_items=args.items, max_len=args.seq_len, d_model=args.d_model,
+        n_layers=2, n_heads=2, dropout=0.0,
+    )
+    sce_cfg = SCEConfig.from_alpha_beta(
+        args.batch * args.seq_len, args.items,
+        bucket_size_y=args.b_y, use_mix=not args.no_mix,
+    )
+    print(f"SASRec-SCE: C={args.items} params={cfg.param_count():,} "
+          f"SCE(n_b={sce_cfg.n_buckets}, b_x={sce_cfg.bucket_size_x}, "
+          f"b_y={sce_cfg.bucket_size_y}, mix={sce_cfg.use_mix})")
+
+    data = SequenceDataset(SeqDataConfig(
+        n_items=args.items, seq_len=args.seq_len, batch_size=args.batch,
+    ))
+    sched = linear_warmup_cosine(1e-3, 20, args.steps)
+    opt_init, opt_update = make_optimizer("adamw", sched)
+
+    params = sasrec.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = opt_init(params)
+    cursor, key, start = Cursor(seed=0), jax.random.PRNGKey(1), 0
+
+    mgr = CheckpointManager(args.ckpt_dir, keep_n=2)
+    last, state = mgr.restore_latest()
+    if last is not None:
+        params, key = state["params"], state["key"]
+        opt_state = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(opt_state),
+            jax.tree_util.tree_leaves(state["opt_state"]),
+        )
+        cursor = Cursor.from_state(state["cursor"])
+        start = int(state["step"]) + 1
+        print(f"resumed from checkpoint at step {last}")
+
+    @jax.jit
+    def train_step(params, opt_state, tokens, targets, valid, key):
+        def loss_fn(p):
+            hidden = sasrec.forward(p, cfg, tokens)
+            return sce_loss(
+                hidden.reshape(-1, cfg.d_model),
+                sasrec.loss_catalog(p, cfg),
+                targets.reshape(-1),
+                key=key, cfg=sce_cfg, valid_mask=valid.reshape(-1),
+            )
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_opt = opt_update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    eval_data = SequenceDataset(SeqDataConfig(
+        n_items=args.items, seq_len=args.seq_len, batch_size=512,
+    ))
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch, cursor = data.next_batch(cursor)
+        key, k = jax.random.split(key)
+        params, opt_state, loss = train_step(
+            params, opt_state,
+            jnp.asarray(batch["tokens"]), jnp.asarray(batch["targets"]),
+            jnp.asarray(batch["valid"]), k,
+        )
+        if step % 25 == 0:
+            print(f"step {step:4d}  sce-loss {float(loss):.4f}")
+        if (step + 1) % args.eval_every == 0 or step == args.steps - 1:
+            eb, _ = eval_data.eval_batch(Cursor(seed=0))
+            m = evaluate_seqrec(params, cfg, eb)
+            print(f"  eval: NDCG@10 {m['ndcg@10']:.4f}  "
+                  f"HR@10 {m['hr@10']:.4f}  COV@10 {m['cov@10']:.4f}")
+            mgr.save(step, {
+                "params": params, "opt_state": opt_state,
+                "key": key, "cursor": cursor.to_state(), "step": step,
+            }, blocking=False)
+    mgr.wait()
+    print(f"done in {time.time()-t0:.0f}s — checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Fault-tolerant checkpointing (DESIGN.md §4).
+
+Guarantees:
+  * **atomicity** — state is written to ``step_N.tmp`` and ``os.rename``d
+    to ``step_N`` only when complete; a crash mid-write never corrupts the
+    latest valid checkpoint, and ``restore_latest`` skips stray ``.tmp``
+    dirs from a previous crash.
+  * **keep-N** — older checkpoints are pruned after each successful save.
+  * **async** — ``save(..., blocking=False)`` snapshots to host
+    (``jax.device_get``, cheap) and writes on a daemon thread so the train
+    loop never stalls on filesystem I/O; ``wait()`` joins before exit.
+  * **elastic** — arrays are stored as full (host-gathered) numpy, so a
+    job restarted on a *different* mesh/device count re-shards on load:
+    pass ``shardings`` (a NamedSharding tree) to ``restore``.
+
+Format: one ``.npz`` holding all leaves keyed by tree path + a pickled
+treedef. Pure numpy/pickle — no orbax dependency in this container.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep_n: int = 3):
+        self.directory = directory
+        self.keep_n = keep_n
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- write -------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, blocking: bool = True) -> None:
+        """Checkpoint ``tree`` at ``step``. Non-blocking saves snapshot to
+        host immediately and write on a background thread."""
+        self.wait()  # one writer at a time; surfaces prior errors
+        host_leaves = [np.asarray(jax.device_get(x)) for x in _flatten(tree)[0]]
+        treedef = _flatten(tree)[1]
+
+        def write():
+            tmp = os.path.join(self.directory, f"step_{step}.tmp")
+            final = os.path.join(self.directory, f"step_{step}")
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            np.savez(
+                os.path.join(tmp, "leaves.npz"),
+                **{f"leaf_{i}": leaf for i, leaf in enumerate(host_leaves)},
+            )
+            with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
+                pickle.dump(treedef, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # the atomic commit point
+            self._prune()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=self._guard(write), daemon=True)
+            self._thread.start()
+
+    def _guard(self, fn):
+        def run():
+            try:
+                fn()
+            except BaseException as e:  # surfaced on next save()/wait()
+                self._error = e
+
+        return run
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _prune(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep_n] if self.keep_n else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"))
+
+    # -- read --------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(
+                os.path.join(self.directory, name, "treedef.pkl")
+            ):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, *, shardings: Any = None) -> Any:
+        """Load the checkpoint at ``step``. ``shardings`` (optional tree of
+        ``jax.sharding.Sharding``) re-shards every leaf onto the *current*
+        mesh — the elastic-restart path."""
+        path = os.path.join(self.directory, f"step_{step}")
+        with open(os.path.join(path, "treedef.pkl"), "rb") as f:
+            treedef = pickle.load(f)
+        with np.load(os.path.join(path, "leaves.npz")) as z:
+            leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings
+            )
+        return tree
+
+    def restore_latest(self, *, shardings: Any = None):
+        """Returns ``(step, tree)`` or ``(None, None)`` if no checkpoint."""
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, shardings=shardings)

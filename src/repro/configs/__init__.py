@@ -1,0 +1,9 @@
+"""Assigned-architecture configs (``--arch <id>``). See common.py."""
+from repro.configs.common import (
+    ArchSpec,
+    ShapeSpec,
+    get_arch,
+    list_archs,
+)
+
+__all__ = ["ArchSpec", "ShapeSpec", "get_arch", "list_archs"]

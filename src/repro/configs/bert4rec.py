@@ -1,0 +1,44 @@
+"""bert4rec — bidirectional sequential recommender [arXiv:1904.06690].
+
+embed_dim=64, n_blocks=2, n_heads=2, seq_len=200. Catalog set to 10^6
+items — the SCE paper's target regime, where full masked-item CE would
+need a ``(B·200) × 10^6`` logit tensor. This arch is the framework's
+NATIVE application of the paper's technique (DESIGN.md §5).
+
+Encoder-only → no autoregressive decode; its shape set is the recsys one
+(train / online-serve / bulk-serve / retrieval), all well-defined.
+"""
+from repro.configs.common import ArchSpec, recsys_shapes, register
+from repro.models import bert4rec as b4r
+
+N_ITEMS = 1_000_000
+
+
+def make_config(shape_name: str = "train_batch"):
+    return b4r.make_config(
+        n_items=N_ITEMS, max_len=200, d_model=64, n_layers=2, n_heads=2
+    )
+
+
+def make_smoke_config():
+    return b4r.make_config(
+        n_items=500, max_len=32, d_model=32, n_layers=2, n_heads=2
+    )
+
+
+ARCH = register(
+    ArchSpec(
+        name="bert4rec",
+        family="seqrec",
+        paper_ref="arXiv:1904.06690",
+        make_config=make_config,
+        make_smoke_config=make_smoke_config,
+        shapes=recsys_shapes(),
+        optimizer="adamw",
+        train_loss="sce",
+        dtype="float32",
+        microbatches={"train_batch": 8},
+        sce_bucket_size_y=512,
+        notes="native SCE application: masked-item CE over a 1M catalog",
+    )
+)

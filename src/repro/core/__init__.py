@@ -1,0 +1,23 @@
+"""Core contribution of the paper: the Scalable Cross-Entropy loss."""
+from repro.core.sce import (
+    SCEConfig,
+    sce_loss,
+    make_bucket_centers,
+    select_buckets,
+    aggregate_bucket_losses,
+    sce_loss_memory_bytes,
+    full_ce_memory_bytes,
+)
+from repro.core.losses import make_loss, loss_peak_elements
+
+__all__ = [
+    "SCEConfig",
+    "sce_loss",
+    "make_bucket_centers",
+    "select_buckets",
+    "aggregate_bucket_losses",
+    "sce_loss_memory_bytes",
+    "full_ce_memory_bytes",
+    "make_loss",
+    "loss_peak_elements",
+]

@@ -1,0 +1,390 @@
+"""Distributed SCE — vocab-parallel MIPS under ``shard_map`` (DESIGN.md §2/§4).
+
+Data layout (mesh axes ``("data", "model")`` or ``("pod", "data", "model")``):
+  * ``X`` (model outputs, N×d)  — rows sharded over the data axes;
+  * ``Y`` (catalog,      C×d)  — rows sharded over ``model`` (vocab-parallel);
+  * buckets are drawn **per data shard** (the paper re-draws ``B`` every
+    batch anyway, so per-shard draws are a faithful randomized variant —
+    recorded as an assumption change in DESIGN.md §2).
+
+Two distribution strategies (``SCEConfig → dist_mode`` chosen by caller):
+
+``"exact"`` — the n_b buckets of a data shard are split across model
+  shards (n_b/m each). Stage 1: every model shard takes its local
+  top-b_y per bucket and ships (value, id, embedding-row) triples through
+  ONE all_to_all (1/m the payload of an all-gather); stage 2: a local
+  top-k over the m·b_y union reproduces the exact global top-b_y.
+  Identical selection to a single-device run → the equality tests.
+  Memory: the stage-1 (n_b, b_y, d) gather — fine for recsys widths
+  (d=64), heavy for LM widths (d≥2304).
+
+``"union"`` — the TPU-native mode (beyond-paper §Perf optimization):
+  every model shard keeps its local top-(b_y/m) candidates and computes
+  in-bucket partial (max, sumexp) ONLINE against its own catalog slice;
+  partials merge across ``model`` in log-space with one tiny psum
+  ((n_b, b_x)·2 floats — ~1 MB). Candidate embeddings NEVER cross the
+  wire. The candidate set is the per-shard-balanced union of local
+  top-(b_y/m) — same size b_y, same hard-negative intent, slightly
+  different members than exact global top-b_y (both are approximate MIPS;
+  the paper's bucket selection is itself a heuristic). Deterministically
+  reproducible by ``sce_loss_sharded_ref(..., mode="union")``.
+
+The full ``(n_b, C)`` score matrix and the ``(N, C)`` logit matrix never
+exist on any device in either mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.sce import NEG_INF, SCEConfig, apply_softcap, make_bucket_centers
+from repro.dist.collectives import all_to_all_bucket_shuffle
+from repro.dist.sharding import data_axes
+
+
+def round_up(x: int, multiple: int) -> int:
+    return -(-x // multiple) * multiple
+
+
+def _data_shard_index(dp: Tuple[str, ...]) -> jax.Array:
+    """Flattened index of this device's data shard across the dp axes."""
+    idx = jnp.zeros((), jnp.int32)
+    for ax in dp:
+        idx = idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+    return idx
+
+
+def _positive_logits(x_l, y_l, t_l, tp, softcap):
+    """Vocab-parallel positive-logit lookup: one psum; targets are
+    identical across model shards so the elementwise sum is the gather."""
+    c_local = y_l.shape[0]
+    shard = jax.lax.axis_index(tp)
+    local = t_l - shard * c_local
+    ok = (local >= 0) & (local < c_local)
+    rows = jnp.take(y_l, jnp.clip(local, 0, c_local - 1), axis=0)
+    rows = jnp.where(ok[..., None], rows, 0)
+    pos_emb = jax.lax.psum(rows, tp)  # (N_local, d)
+    return apply_softcap(jnp.einsum("nd,nd->n", x_l, pos_emb), softcap)
+
+
+def _aggregate(per_bucket_losses, idx_x, n_local, vm_l, axes):
+    """Cross-bucket max per position → mean over covered → global mean."""
+    per_pos = jax.ops.segment_max(
+        per_bucket_losses.reshape(-1),
+        idx_x.reshape(-1),
+        num_segments=n_local,
+    )
+    hit = jax.ops.segment_max(
+        jnp.ones_like(per_bucket_losses.reshape(-1)),
+        idx_x.reshape(-1),
+        num_segments=n_local,
+    )
+    per_pos = jnp.where(hit > 0, per_pos, NEG_INF)
+    return per_pos
+
+
+def _sce_inner_exact(
+    key, x_l, y_l, t_l, vm_l, *, cfg: SCEConfig, dp, tp
+):
+    n_local, d = x_l.shape
+    c_local = y_l.shape[0]
+    m = jax.lax.psum(1, tp)
+    tp_i = jax.lax.axis_index(tp)
+
+    n_b = cfg.n_buckets  # caller guarantees n_b % m == 0
+    nb_l = n_b // m
+    b_y = min(cfg.bucket_size_y, c_local)
+    b_x = min(cfg.bucket_size_x, n_local)
+
+    key_l = jax.random.fold_in(key, _data_shard_index(dp))
+    b = make_bucket_centers(
+        key_l, x_l, n_b, use_mix=cfg.use_mix, valid_mask=vm_l
+    )
+
+    # -- Y side: local top-b_y for ALL buckets; one all_to_all of the
+    #    (value, id, row) candidate triples; exact top-b_y over the union.
+    ys = jax.lax.stop_gradient(y_l)
+    yp = b @ ys.T  # (n_b, C_local)
+    vals, idx = jax.lax.top_k(yp, b_y)
+    emb = jnp.take(y_l, idx, axis=0)  # (n_b, b_y, d) — differentiable
+    gidx = idx + tp_i * c_local
+
+    vals_s = all_to_all_bucket_shuffle(vals, tp)  # (m, nb_l, b_y)
+    gidx_s = all_to_all_bucket_shuffle(gidx, tp)
+    emb_s = all_to_all_bucket_shuffle(emb, tp)  # (m, nb_l, b_y, d)
+
+    vals_u = jnp.swapaxes(vals_s, 0, 1).reshape(nb_l, m * b_y)
+    gidx_u = jnp.swapaxes(gidx_s, 0, 1).reshape(nb_l, m * b_y)
+    emb_u = jnp.swapaxes(emb_s, 0, 1).reshape(nb_l, m * b_y, d)
+    _, sel = jax.lax.top_k(vals_u, b_y)  # (nb_l, b_y)
+    cand_ids = jnp.take_along_axis(gidx_u, sel, axis=-1)
+    y_b = jnp.take_along_axis(emb_u, sel[..., None], axis=-2)
+
+    # -- X side: this model shard's bucket slice over local positions -----
+    xs = jax.lax.stop_gradient(x_l)
+    b_slice = jax.lax.dynamic_slice_in_dim(b, tp_i * nb_l, nb_l, axis=0)
+    xp = b_slice @ xs.T  # (nb_l, N_local)
+    xp = jnp.where(vm_l[None, :], xp, NEG_INF)
+    _, idx_x = jax.lax.top_k(xp, b_x)
+    x_b = jnp.take(x_l, idx_x, axis=0)  # (nb_l, b_x, d)
+    tgt_b = jnp.take(t_l, idx_x, axis=0)
+
+    pos_logit_all = _positive_logits(x_l, y_l, t_l, tp, cfg.logit_softcap)
+    pos_logit = jnp.take(pos_logit_all, idx_x, axis=0)
+
+    # -- in-bucket CE (Algorithm 1 lines 12–15) ----------------------------
+    if cfg.use_kernel and cfg.logit_softcap is None:
+        from repro.kernels import ops as _kops
+
+        losses = _kops.sce_bucket_loss(x_b, y_b, tgt_b, cand_ids, pos_logit)
+    else:
+        neg = apply_softcap(
+            jnp.einsum("nxd,nyd->nxy", x_b, y_b), cfg.logit_softcap
+        )
+        collide = cand_ids[:, None, :] == tgt_b[:, :, None]
+        neg = jnp.where(collide, NEG_INF, neg)
+        all_logits = jnp.concatenate([pos_logit[..., None], neg], axis=-1)
+        losses = jax.nn.logsumexp(all_logits, axis=-1) - pos_logit
+
+    # -- cross-bucket max: local segment_max, then max across model shards -
+    per_pos = _aggregate(losses, idx_x, n_local, vm_l, dp)
+    all_pp = jax.lax.all_gather(per_pos, tp, axis=0)  # (m, N_local)
+    per_pos = jnp.max(all_pp, axis=0)
+    covered = (per_pos > NEG_INF / 2) & vm_l
+    per_pos = jnp.where(covered, per_pos, 0.0)
+
+    # num/den identical across model shards; psum over (dp + tp) cancels
+    # the m factor in the ratio and keeps the output VMA-unvarying.
+    axes = tuple(dp) + (tp,)
+    num = jax.lax.psum(jnp.sum(per_pos), axes)
+    den = jax.lax.psum(jnp.sum(covered.astype(per_pos.dtype)), axes)
+    return num / jnp.maximum(den, 1.0)
+
+
+def _sce_inner_union(
+    key, x_l, y_l, t_l, vm_l, *, cfg: SCEConfig, dp, tp, bucket_chunks: int
+):
+    """Union mode: local candidates only, log-space partial merge.
+
+    Per model shard: candidates = local top-(b_y/m) of its catalog slice;
+    in-bucket partial (max, sumexp) computed against ALL buckets in
+    ``bucket_chunks`` rematerialized chunks (peak = one chunk's x_b
+    gather); merged across ``model`` with one psum/pmax pair.
+    """
+    n_local, d = x_l.shape
+    c_local = y_l.shape[0]
+    m = jax.lax.psum(1, tp)
+    tp_i = jax.lax.axis_index(tp)
+
+    n_b = cfg.n_buckets
+    b_x = min(cfg.bucket_size_x, n_local)
+    k_local = max(1, min(cfg.bucket_size_y // m, c_local))
+
+    key_l = jax.random.fold_in(key, _data_shard_index(dp))
+    b = make_bucket_centers(
+        key_l, x_l, n_b, use_mix=cfg.use_mix, valid_mask=vm_l
+    )
+
+    # X side: ALL buckets on every shard (needed for the local partials).
+    xs = jax.lax.stop_gradient(x_l)
+    xp = jnp.where(vm_l[None, :], b @ xs.T, NEG_INF)  # (n_b, N_local)
+    _, idx_x = jax.lax.top_k(xp, b_x)  # (n_b, b_x)
+
+    # Y side: local top-(b_y/m) per bucket — no communication.
+    ys = jax.lax.stop_gradient(y_l)
+    yp = b @ ys.T  # (n_b, C_local)
+    _, idx_y = jax.lax.top_k(yp, k_local)  # (n_b, k_local)
+    gidx_y = idx_y + tp_i * c_local
+
+    pos_logit_all = _positive_logits(x_l, y_l, t_l, tp, cfg.logit_softcap)
+
+    assert n_b % bucket_chunks == 0, (n_b, bucket_chunks)
+    nb_c = n_b // bucket_chunks
+
+    def chunk_partials(chunk):
+        """One bucket chunk → partial LSE over local candidates.
+        Rematerialized so the backward never stacks the (n_b, b_x, d)
+        gathers. Kernel-backed on TPU (ops.sce_bucket_plse streams the
+        candidate tiles through VMEM)."""
+        idx_x_c, idx_y_c, gidx_c = chunk
+        x_b = jnp.take(x_l, idx_x_c, axis=0)  # (nb_c, b_x, d)
+        y_b = jnp.take(y_l, idx_y_c, axis=0)  # (nb_c, k_local, d)
+        tgt_b = jnp.take(t_l, idx_x_c, axis=0)
+        if cfg.use_kernel and cfg.logit_softcap is None:
+            from repro.kernels import ops as _kops
+
+            return _kops.sce_bucket_plse(x_b, y_b, tgt_b, gidx_c)
+        neg = apply_softcap(
+            jnp.einsum("nxd,nyd->nxy", x_b, y_b), cfg.logit_softcap
+        )
+        collide = gidx_c[:, None, :] == tgt_b[:, :, None]
+        neg = jnp.where(collide, NEG_INF, neg).astype(jnp.float32)
+        mx = jnp.max(neg, axis=-1)  # (nb_c, b_x)
+        sx = jnp.sum(jnp.exp(neg - mx[..., None]), axis=-1)
+        return mx + jnp.log(jnp.maximum(sx, 1e-30))
+
+    chunks = (
+        idx_x.reshape(bucket_chunks, nb_c, b_x),
+        idx_y.reshape(bucket_chunks, nb_c, k_local),
+        gidx_y.reshape(bucket_chunks, nb_c, k_local),
+    )
+    plse = jax.lax.map(
+        jax.checkpoint(chunk_partials, prevent_cse=False), chunks
+    ).reshape(n_b, b_x)
+
+    # log-space merge across model shards: one pmax + one psum (~1 MB).
+    # pmax runs on a stopped-gradient copy — the max shift in a logsumexp
+    # is gradient-neutral, and pmax has no differentiation rule.
+    g_m = jax.lax.pmax(jax.lax.stop_gradient(plse), tp)
+    g_s = jax.lax.psum(jnp.exp(plse - g_m), tp)
+    pos_logit = jnp.take(pos_logit_all, idx_x, axis=0).astype(jnp.float32)
+    lse = jnp.logaddexp(g_m + jnp.log(jnp.maximum(g_s, 1e-30)), pos_logit)
+    losses = lse - pos_logit  # (n_b, b_x)
+
+    per_pos = _aggregate(losses, idx_x, n_local, vm_l, dp)
+    covered = (per_pos > NEG_INF / 2) & vm_l
+    per_pos = jnp.where(covered, per_pos, 0.0)
+
+    # The pmax/psum merge already made the losses model-invariant, so the
+    # final reduction runs over the data axes only.
+    num = jax.lax.psum(jnp.sum(per_pos), tuple(dp))
+    den = jax.lax.psum(jnp.sum(covered.astype(per_pos.dtype)), tuple(dp))
+    return num / jnp.maximum(den, 1.0)
+
+
+def sce_loss_sharded(
+    x: jax.Array,  # (N, d) global
+    y: jax.Array,  # (C, d) global
+    targets: jax.Array,  # (N,)
+    *,
+    key: jax.Array,
+    cfg: SCEConfig,
+    mesh: Mesh,
+    valid_mask: Optional[jax.Array] = None,
+    mode: str = "exact",
+    bucket_chunks: Optional[int] = None,
+):
+    """Distributed SCE loss (see module docstring).
+
+    ``cfg.n_buckets`` is rounded up to a multiple of the model-axis size so
+    buckets split evenly; callers that need paper-exact ``n_b`` should pass
+    a pre-rounded config.
+    """
+    dp = data_axes(mesh)
+    tp = "model"
+    m = mesh.shape[tp]
+    if cfg.n_buckets % m != 0:
+        cfg = dataclasses.replace(cfg, n_buckets=round_up(cfg.n_buckets, m))
+    if valid_mask is None:
+        valid_mask = jnp.ones(x.shape[:1], bool)
+
+    if mode == "exact":
+        inner = functools.partial(_sce_inner_exact, cfg=cfg, dp=dp, tp=tp)
+    elif mode == "union":
+        bc = bucket_chunks or m
+        while cfg.n_buckets % bc:
+            bc -= 1
+        inner = functools.partial(
+            _sce_inner_union, cfg=cfg, dp=dp, tp=tp, bucket_chunks=bc
+        )
+    else:
+        raise ValueError(mode)
+    fn = jax.shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(P(), P(dp, None), P(tp, None), P(dp), P(dp)),
+        out_specs=P(),
+    )
+    return fn(key, x, y, targets, valid_mask)
+
+
+def sce_loss_sharded_ref(
+    x: jax.Array,
+    y: jax.Array,
+    targets: jax.Array,
+    *,
+    key: jax.Array,
+    cfg: SCEConfig,
+    dp_size: int,
+    valid_mask: Optional[jax.Array] = None,
+    mode: str = "exact",
+    tp_size: int = 1,
+):
+    """Single-device oracle for :func:`sce_loss_sharded`.
+
+    ``mode="exact"``: full-catalog candidate top-k (the two-stage
+    distributed top-k is exact → same selection).
+    ``mode="union"``: per-model-shard top-(b_y/m) over each catalog slice,
+    concatenated — bit-matches the union mode's candidate set.
+    """
+    if cfg.n_buckets % tp_size != 0:  # same rounding as the sharded path
+        cfg = dataclasses.replace(
+            cfg, n_buckets=round_up(cfg.n_buckets, tp_size)
+        )
+    n = x.shape[0]
+    assert n % dp_size == 0
+    n_l = n // dp_size
+    c = y.shape[0]
+    if valid_mask is None:
+        valid_mask = jnp.ones((n,), bool)
+
+    num = jnp.zeros((), jnp.float32)
+    den = jnp.zeros((), jnp.float32)
+    for i in range(dp_size):
+        x_i = x[i * n_l : (i + 1) * n_l]
+        t_i = targets[i * n_l : (i + 1) * n_l]
+        vm_i = valid_mask[i * n_l : (i + 1) * n_l]
+        key_i = jax.random.fold_in(key, i)
+        b = make_bucket_centers(
+            key_i, x_i, cfg.n_buckets, use_mix=cfg.use_mix, valid_mask=vm_i
+        )
+        xs = jax.lax.stop_gradient(x_i)
+        ys = jax.lax.stop_gradient(y)
+        xp = jnp.where(vm_i[None, :], b @ xs.T, NEG_INF)
+        b_x = min(cfg.bucket_size_x, n_l)
+        _, idx_x = jax.lax.top_k(xp, b_x)
+
+        if mode == "exact":
+            _, idx_y = jax.lax.top_k(b @ ys.T, cfg.bucket_size_y)
+        else:  # union of per-shard top-(b_y/m) over catalog slices
+            c_l = c // tp_size
+            k_local = max(1, min(cfg.bucket_size_y // tp_size, c_l))
+            parts = []
+            for j in range(tp_size):
+                y_j = ys[j * c_l : (j + 1) * c_l]
+                _, idx_j = jax.lax.top_k(b @ y_j.T, k_local)
+                parts.append(idx_j + j * c_l)
+            idx_y = jnp.concatenate(parts, axis=-1)
+
+        x_b = jnp.take(x_i, idx_x, axis=0)
+        y_b = jnp.take(y, idx_y, axis=0)
+        tgt_b = jnp.take(t_i, idx_x, axis=0)
+        pos_logit = apply_softcap(
+            jnp.einsum("nxd,nxd->nx", x_b, jnp.take(y, tgt_b, axis=0)),
+            cfg.logit_softcap,
+        )
+        neg = apply_softcap(
+            jnp.einsum("nxd,nyd->nxy", x_b, y_b), cfg.logit_softcap
+        )
+        collide = idx_y[:, None, :] == tgt_b[:, :, None]
+        neg = jnp.where(collide, NEG_INF, neg)
+        all_logits = jnp.concatenate([pos_logit[..., None], neg], axis=-1)
+        losses = jax.nn.logsumexp(all_logits, axis=-1) - pos_logit
+
+        per_pos = jax.ops.segment_max(
+            losses.reshape(-1), idx_x.reshape(-1), num_segments=n_l
+        )
+        hit = jax.ops.segment_max(
+            jnp.ones((idx_x.size,), jnp.float32),
+            idx_x.reshape(-1),
+            num_segments=n_l,
+        )
+        covered = (hit > 0) & vm_i
+        num = num + jnp.sum(jnp.where(covered, per_pos, 0.0))
+        den = den + jnp.sum(covered.astype(jnp.float32))
+    return num / jnp.maximum(den, 1.0)

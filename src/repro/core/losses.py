@@ -1,0 +1,340 @@
+"""Baseline loss functions the paper compares SCE against (§2.2, §4.1.3).
+
+All losses share one functional signature so the trainer / benchmarks can
+swap them freely:
+
+    loss, aux = fn(x, y, targets, valid_mask=None, key=None)
+
+with ``x: (N, d)`` model outputs, ``y: (C, d)`` catalog embeddings,
+``targets: (N,)`` positive class ids, ``valid_mask: (N,) bool``.
+
+Implemented:
+  * ``ce``          — full Cross-Entropy over the catalog (paper eq. 1).
+  * ``ce_chunked``  — numerically identical CE with an online logsumexp
+                      over vocab chunks (never materializes ``N×C``);
+                      the TPU-honest baseline.
+  * ``ce_fused``    — CE via the Pallas fused kernel (kernels/fused_ce.py).
+  * ``bce``         — Binary CE with 1 uniform negative (paper eq. 2).
+  * ``bce_plus``    — BCE with k uniform negatives (paper eq. 3, Caser-style).
+  * ``gbce``        — gSASRec generalized BCE with calibration parameter t
+                      (Petrov & Macdonald 2023).
+  * ``ce_minus``    — sampled CE with k uniform negatives (paper eq. 4,
+                      Klenitskiy & Vasilev 2023).
+  * ``ce_inbatch``  — in-batch negatives (paper §2.2; implicitly
+                      popularity-weighted, collision-masked).
+  * ``ce_pop``      — sampled CE with popularity-proportional negatives
+                      (paper §2.2).
+  * ``rece``        — Reduced Cross-Entropy, the paper's closest prior
+                      method (Gusak et al. CIKM '24; paper §3.1/Table 4).
+  * ``sce``         — the paper's contribution (core/sce.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sce import NEG_INF, SCEConfig, sce_loss
+
+Aux = Dict[str, jax.Array]
+LossFn = Callable[..., Tuple[jax.Array, Aux]]
+
+
+def _mean_over_valid(per_pos: jax.Array, valid_mask: Optional[jax.Array]):
+    if valid_mask is None:
+        return jnp.mean(per_pos)
+    w = valid_mask.astype(per_pos.dtype)
+    return jnp.sum(per_pos * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def ce(x, y, targets, valid_mask=None, key=None) -> Tuple[jax.Array, Aux]:
+    """Full CE — materializes the (N, C) logit tensor (the memory hog)."""
+    logits = x @ y.T  # (N, C)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    pos = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    per_pos = lse - pos
+    return _mean_over_valid(per_pos, valid_mask), {"lse": jnp.mean(lse)}
+
+
+def ce_chunked(
+    x, y, targets, valid_mask=None, key=None, *, chunk_size: int = 8192
+) -> Tuple[jax.Array, Aux]:
+    """CE with an online (streaming) logsumexp over catalog chunks.
+
+    Numerically identical to :func:`ce` but peak loss-memory is
+    ``N × chunk_size`` instead of ``N × C``. Chunks are scanned with a
+    carried (running-max, running-sumexp) pair — the same recurrence the
+    fused Pallas kernel implements in VMEM.
+    """
+    n, d = x.shape
+    c = y.shape[0]
+    n_chunks = -(-c // chunk_size)
+    pad = n_chunks * chunk_size - c
+    # Pad catalog with zero rows; padded columns are masked to -inf.
+    y_pad = jnp.pad(y, ((0, pad), (0, 0)))
+    y_chunks = y_pad.reshape(n_chunks, chunk_size, d)
+    col_ids = jnp.arange(n_chunks * chunk_size).reshape(n_chunks, chunk_size)
+
+    def step(carry, inp):
+        m, s = carry  # running max (N,), running sumexp (N,)
+        y_c, ids = inp
+        logits = x @ y_c.T  # (N, chunk)
+        logits = jnp.where((ids < c)[None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        s = s * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[:, None]), axis=-1
+        )
+        return (m_new, s), None
+
+    init = (jnp.full((n,), NEG_INF, x.dtype), jnp.zeros((n,), x.dtype))
+    (m, s), _ = jax.lax.scan(step, init, (y_chunks, col_ids))
+    lse = m + jnp.log(s)
+    pos = jnp.einsum("nd,nd->n", x, jnp.take(y, targets, axis=0))
+    per_pos = lse - pos
+    return _mean_over_valid(per_pos, valid_mask), {"lse": jnp.mean(lse)}
+
+
+def ce_fused(x, y, targets, valid_mask=None, key=None) -> Tuple[jax.Array, Aux]:
+    """CE via the fused Pallas kernel (VMEM-streaming logsumexp)."""
+    from repro.kernels import ops as _kops
+
+    per_pos = _kops.fused_ce_loss(x, y, targets)
+    return _mean_over_valid(per_pos, valid_mask), {}
+
+
+def _sample_negatives(key, n, k, catalog):
+    """k uniform negatives per position — (n, k) int32."""
+    return jax.random.randint(key, (n, k), 0, catalog, dtype=jnp.int32)
+
+
+def _neg_logits(x, y, neg_ids, targets):
+    """Gathered negative logits with accidental-positive collisions masked."""
+    neg_emb = jnp.take(y, neg_ids, axis=0)  # (N, k, d) — the BCE+ memory term
+    logits = jnp.einsum("nd,nkd->nk", x, neg_emb)
+    collide = neg_ids == targets[:, None]
+    return jnp.where(collide, NEG_INF, logits)
+
+
+def bce_plus(
+    x, y, targets, valid_mask=None, key=None, *, num_negatives: int = 1
+) -> Tuple[jax.Array, Aux]:
+    """BCE with ``num_negatives`` uniform negatives (paper eq. 3)."""
+    assert key is not None, "bce_plus needs a PRNG key for negative sampling"
+    n = x.shape[0]
+    neg_ids = _sample_negatives(key, n, num_negatives, y.shape[0])
+    pos = jnp.einsum("nd,nd->n", x, jnp.take(y, targets, axis=0))
+    neg = _neg_logits(x, y, neg_ids, targets)
+    per_pos = -jax.nn.log_sigmoid(pos) - jnp.sum(
+        jax.nn.log_sigmoid(-neg), axis=-1
+    )
+    return _mean_over_valid(per_pos, valid_mask), {}
+
+
+def bce(x, y, targets, valid_mask=None, key=None) -> Tuple[jax.Array, Aux]:
+    """Original SASRec BCE: one positive, one uniform negative (eq. 2)."""
+    return bce_plus(x, y, targets, valid_mask, key, num_negatives=1)
+
+
+def gbce(
+    x,
+    y,
+    targets,
+    valid_mask=None,
+    key=None,
+    *,
+    num_negatives: int = 1,
+    t: float = 0.75,
+) -> Tuple[jax.Array, Aux]:
+    """gSASRec's generalized BCE (Petrov & Macdonald, RecSys '23).
+
+    The positive sigmoid is raised to the power
+    ``beta = alpha * (t * (1 - 1/alpha) + 1/alpha)`` with sampling rate
+    ``alpha = k / (C - 1)`` — calibrating away the overconfidence induced
+    by uniform negative sampling.
+    """
+    assert key is not None
+    n = x.shape[0]
+    c = y.shape[0]
+    alpha = num_negatives / max(c - 1, 1)
+    beta = alpha * (t * (1.0 - 1.0 / alpha) + 1.0 / alpha)
+    neg_ids = _sample_negatives(key, n, num_negatives, c)
+    pos = jnp.einsum("nd,nd->n", x, jnp.take(y, targets, axis=0))
+    neg = _neg_logits(x, y, neg_ids, targets)
+    per_pos = -beta * jax.nn.log_sigmoid(pos) - jnp.sum(
+        jax.nn.log_sigmoid(-neg), axis=-1
+    )
+    return _mean_over_valid(per_pos, valid_mask), {"beta": jnp.asarray(beta)}
+
+
+def ce_minus(
+    x, y, targets, valid_mask=None, key=None, *, num_negatives: int = 1
+) -> Tuple[jax.Array, Aux]:
+    """Sampled CE over k uniform negatives + the positive (paper eq. 4)."""
+    assert key is not None
+    n = x.shape[0]
+    neg_ids = _sample_negatives(key, n, num_negatives, y.shape[0])
+    pos = jnp.einsum("nd,nd->n", x, jnp.take(y, targets, axis=0))
+    neg = _neg_logits(x, y, neg_ids, targets)
+    all_logits = jnp.concatenate([pos[:, None], neg], axis=-1)
+    per_pos = jax.nn.logsumexp(all_logits, axis=-1) - pos
+    return _mean_over_valid(per_pos, valid_mask), {}
+
+
+def ce_inbatch(x, y, targets, valid_mask=None, key=None) -> Tuple[jax.Array, Aux]:
+    """In-batch negatives (paper §2.2, Hidasi-style): each position's
+    negative set is the OTHER positions' positive items — implicitly
+    popularity-weighted, zero extra sampling cost. Collisions (another
+    position sharing this position's target) are masked."""
+    pos_emb = jnp.take(y, targets, axis=0)  # (N, d)
+    logits = x @ pos_emb.T  # (N, N) — logits[i, j] = x_i · y_{t_j}
+    collide = targets[None, :] == targets[:, None]
+    eye = jnp.eye(logits.shape[0], dtype=bool)
+    neg = jnp.where(collide & ~eye, NEG_INF, logits)
+    if valid_mask is not None:  # padded positions contribute no negatives
+        neg = jnp.where(valid_mask[None, :], neg, NEG_INF)
+        neg = jnp.where(eye, logits, neg)  # keep own positive on the diag
+    lse = jax.nn.logsumexp(neg, axis=-1)
+    per_pos = lse - jnp.diagonal(logits)
+    return _mean_over_valid(per_pos, valid_mask), {}
+
+
+def ce_pop(
+    x, y, targets, valid_mask=None, key=None, *,
+    num_negatives: int = 1, popularity: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Aux]:
+    """Sampled CE with POPULARITY-proportional negatives (paper §2.2 —
+    'often better than uniform, outperformed by hard-negative methods').
+    ``popularity``: unnormalized per-item counts (C,); uniform if None."""
+    assert key is not None
+    n, c = x.shape[0], y.shape[0]
+    if popularity is None:
+        neg_ids = _sample_negatives(key, n, num_negatives, c)
+    else:
+        logp = jnp.log(jnp.maximum(popularity.astype(jnp.float32), 1e-9))
+        neg_ids = jax.random.categorical(
+            key, logp[None, :], shape=(n, num_negatives)
+        ).astype(jnp.int32)
+    pos = jnp.einsum("nd,nd->n", x, jnp.take(y, targets, axis=0))
+    neg = _neg_logits(x, y, neg_ids, targets)
+    all_logits = jnp.concatenate([pos[:, None], neg], axis=-1)
+    per_pos = jax.nn.logsumexp(all_logits, axis=-1) - pos
+    return _mean_over_valid(per_pos, valid_mask), {}
+
+
+def rece(
+    x, y, targets, valid_mask=None, key=None, *, n_hashes: int = 8,
+    n_chunks: int = 16,
+) -> Tuple[jax.Array, Aux]:
+    """RECE — Reduced Cross-Entropy (Gusak et al., CIKM '24), the SCE
+    paper's closest prior method (§3.1, Table 4), reimplemented from that
+    description: angular-LSH codes partition ALL outputs and ALL catalog
+    items into buckets (every object lands in exactly one bucket — bucket
+    sizes fixed by the partition, unlike SCE's tunable top-k buckets);
+    a chunking step equalizes bucket sizes by sorting on the hash code
+    and cutting equal chunks; CE is computed within aligned chunks.
+    """
+    assert key is not None
+    n, d = x.shape
+    c = y.shape[0]
+    planes = jax.random.normal(key, (d, n_hashes))
+    bits = jnp.arange(n_hashes)
+
+    def codes(v):
+        s = (jax.lax.stop_gradient(v) @ planes) > 0
+        return jnp.sum(s.astype(jnp.int32) << bits, axis=-1)
+
+    # sort by code; equal-size chunks = the RECE chunking step
+    x_order = jnp.argsort(codes(x))
+    y_order = jnp.argsort(codes(y))
+    cx, cy = n // n_chunks, c // n_chunks
+    xi = x_order[: n_chunks * cx].reshape(n_chunks, cx)
+    yi = y_order[: n_chunks * cy].reshape(n_chunks, cy)
+
+    x_b = jnp.take(x, xi, axis=0)  # (n_chunks, cx, d)
+    y_b = jnp.take(y, yi, axis=0)  # (n_chunks, cy, d)
+    tgt_b = jnp.take(targets, xi, axis=0)
+    pos = jnp.einsum("nxd,nxd->nx", x_b, jnp.take(y, tgt_b, axis=0))
+    neg = jnp.einsum("nxd,nyd->nxy", x_b, y_b)
+    collide = yi[:, None, :] == tgt_b[:, :, None]
+    neg = jnp.where(collide, NEG_INF, neg)
+    all_logits = jnp.concatenate([pos[..., None], neg], axis=-1)
+    losses = jax.nn.logsumexp(all_logits, axis=-1) - pos  # (n_chunks, cx)
+
+    # scatter back to positions (each position in exactly one chunk);
+    # the sort may drop a tail of < n_chunks positions — mask them out
+    per_pos = jnp.zeros((n,), losses.dtype).at[xi.reshape(-1)].set(
+        losses.reshape(-1)
+    )
+    covered = jnp.zeros((n,), bool).at[xi.reshape(-1)].set(True)
+    if valid_mask is not None:
+        covered = covered & valid_mask
+    w = covered.astype(per_pos.dtype)
+    return jnp.sum(per_pos * w) / jnp.maximum(jnp.sum(w), 1.0), {}
+
+
+def _sce_wrapper(x, y, targets, valid_mask=None, key=None, *, cfg: SCEConfig):
+    assert key is not None
+    loss, aux = sce_loss(
+        x, y, targets, key=key, cfg=cfg, valid_mask=valid_mask, return_aux=True
+    )
+    return loss, aux
+
+
+_REGISTRY = {
+    "ce": lambda **kw: ce,
+    "ce_chunked": lambda **kw: functools.partial(ce_chunked, **kw),
+    "ce_fused": lambda **kw: ce_fused,
+    "bce": lambda **kw: bce,
+    "bce_plus": lambda **kw: functools.partial(bce_plus, **kw),
+    "gbce": lambda **kw: functools.partial(gbce, **kw),
+    "ce_minus": lambda **kw: functools.partial(ce_minus, **kw),
+    "ce_inbatch": lambda **kw: ce_inbatch,
+    "ce_pop": lambda **kw: functools.partial(ce_pop, **kw),
+    "rece": lambda **kw: functools.partial(rece, **kw),
+    "sce": lambda **kw: functools.partial(_sce_wrapper, **kw),
+}
+
+
+def make_loss(name: str, **kwargs) -> LossFn:
+    """Build a loss function by registry name. See module docstring."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown loss {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)
+
+
+def loss_peak_elements(
+    name: str,
+    n_positions: int,
+    catalog: int,
+    d: int,
+    *,
+    num_negatives: int = 0,
+    cfg: Optional[SCEConfig] = None,
+) -> int:
+    """Analytic peak element count of loss-side tensors (paper Figs. 2/5).
+
+    Counts the logit tensor plus any materialized negative/candidate
+    embedding gathers — the terms that actually dominate the PyTorch
+    memory-profiler traces in the paper.
+    """
+    if name in ("ce",):
+        return n_positions * catalog
+    if name in ("ce_chunked", "ce_fused"):
+        return n_positions * min(8192, catalog)
+    if name in ("bce", "bce_plus", "gbce", "ce_minus", "ce_pop"):
+        k = max(1, num_negatives)
+        return n_positions * k + n_positions * k * d
+    if name == "ce_inbatch":
+        return n_positions * n_positions + n_positions * d
+    if name == "rece":
+        # n_chunks aligned chunks of (N/k) x (C/k): total N·C/k logits
+        k = 16
+        return n_positions * (catalog // k) + n_positions * d
+    if name == "sce":
+        assert cfg is not None
+        sel = cfg.n_buckets * (cfg.bucket_size_x + cfg.bucket_size_y) * d
+        proj = cfg.n_buckets * max(n_positions, catalog)
+        return cfg.logit_tensor_elements() + sel + proj
+    raise KeyError(name)

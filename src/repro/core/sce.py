@@ -1,0 +1,284 @@
+"""Scalable Cross-Entropy (SCE) loss — Algorithm 1 of Mezentsev et al.,
+RecSys '24, plus the Mix bucket-collapse mitigation (paper §3.2).
+
+The loss approximates full cross-entropy over a catalog of ``C`` items by
+
+  1. drawing ``n_b`` random bucket centers ``B`` (``randn`` or, with Mix,
+     a random projection of the model outputs, ``B = Ω X``),
+  2. selecting, per bucket, the top-``b_x`` model outputs and top-``b_y``
+     catalog embeddings by inner product with the bucket center
+     (a batched, same-bucket-size approximate MIPS — only matmul + top_k,
+     so it maps directly onto the MXU),
+  3. computing in-bucket logits ``X[I_b] Y[J_b]^T`` with the positive class
+     masked out of the negative set, and a per-position CE against the
+     explicitly-computed positive logit,
+  4. aggregating with a per-position ``max`` over buckets (the partial
+     denominator closest to the full-catalog sum) and averaging over the
+     positions covered by at least one bucket.
+
+Shapes follow the paper: ``X ∈ R^{N×d}`` with ``N = s·l`` flattened
+positions, ``Y ∈ R^{C×d}``, bucket-logit tensor ``n_b × b_x × b_y``
+(*the* memory win vs the ``N × C`` full-CE logit tensor).
+
+Two computation paths are provided:
+  * ``pure-jnp`` (default): materializes the bucket-logit tensor — the
+    paper-faithful implementation and the test oracle.
+  * ``kernel``: fused Pallas kernel (``repro.kernels.ops.sce_bucket_loss``)
+    that streams ``b_y`` tiles through VMEM with an online logsumexp and
+    never materializes bucket logits (beyond-paper TPU adaptation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative stand-in for -inf (keeps bf16 finite)
+
+
+@dataclasses.dataclass(frozen=True)
+class SCEConfig:
+    """Hyperparameters of the SCE loss.
+
+    The paper parametrizes ``n_b`` and ``b_x`` via an oversampling factor
+    ``alpha`` and a bucket shape factor ``beta`` (§4.2.1):
+
+        b_x = alpha * sqrt(N / beta),   n_b = alpha * sqrt(N * beta)
+
+    so that ``n_b * b_x = alpha^2 * N`` and ``beta = n_b / b_x``.
+    Defaults follow the paper's chosen ``alpha=2, beta=1``.
+    """
+
+    n_buckets: int
+    bucket_size_x: int
+    bucket_size_y: int
+    use_mix: bool = True
+    use_kernel: bool = False
+    # Final-logit soft-capping (gemma-2): cap·tanh(logit/cap) applied to
+    # positive and in-bucket negative logits. Pure-jnp path only — the
+    # fused kernel asserts it off (DESIGN.md §Arch-applicability).
+    logit_softcap: Optional[float] = None
+
+    @staticmethod
+    def from_alpha_beta(
+        n_positions: int,
+        catalog_size: int,
+        *,
+        alpha: float = 2.0,
+        beta: float = 1.0,
+        bucket_size_y: int = 256,
+        use_mix: bool = True,
+        use_kernel: bool = False,
+    ) -> "SCEConfig":
+        n_b = max(1, int(round(alpha * (n_positions * beta) ** 0.5)))
+        b_x = max(1, int(round(alpha * (n_positions / beta) ** 0.5)))
+        b_x = min(b_x, n_positions)
+        b_y = min(bucket_size_y, catalog_size)
+        return SCEConfig(
+            n_buckets=n_b,
+            bucket_size_x=b_x,
+            bucket_size_y=b_y,
+            use_mix=use_mix,
+            use_kernel=use_kernel,
+        )
+
+    def logit_tensor_elements(self) -> int:
+        """Size of the largest loss-side tensor (paper §3.1 memory model)."""
+        return self.n_buckets * self.bucket_size_x * self.bucket_size_y
+
+
+def make_bucket_centers(
+    key: jax.Array,
+    x: jax.Array,
+    n_buckets: int,
+    *,
+    use_mix: bool,
+    valid_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Draw bucket centers ``B ∈ R^{n_b × d}``.
+
+    Without Mix: ``B ~ N(0, 1)`` (Algorithm 1, line 2).
+    With Mix (§3.2): ``B = Ω X`` with ``Ω ~ N(0,1)^{n_b × N}`` — a
+    Halko-style randomized range finder over the model outputs, which
+    spreads buckets along informative directions of ``X``.
+    Selection is non-differentiable; ``X`` enters through
+    ``stop_gradient`` only.
+    """
+    xs = jax.lax.stop_gradient(x)
+    if not use_mix:
+        return jax.random.normal(key, (n_buckets, xs.shape[-1]), xs.dtype)
+    omega = jax.random.normal(key, (n_buckets, xs.shape[0]), xs.dtype)
+    if valid_mask is not None:
+        # Padding positions carry no information — exclude from the mix.
+        omega = omega * valid_mask[None, :].astype(xs.dtype)
+    b = omega @ xs
+    # Normalize scale so projections are comparable across N (keeps top-k
+    # selection invariant; does not change which items are selected).
+    return b / jnp.sqrt(jnp.asarray(max(xs.shape[0], 1), xs.dtype))
+
+
+def select_buckets(
+    b: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    cfg: SCEConfig,
+    *,
+    valid_mask: Optional[jax.Array] = None,
+):
+    """Algorithm 1 lines 3–11: project and take per-bucket top-k.
+
+    Returns ``(idx_x, idx_y)`` of shapes ``(n_b, b_x)`` and ``(n_b, b_y)``.
+    """
+    xs = jax.lax.stop_gradient(x)
+    ys = jax.lax.stop_gradient(y)
+    xp = b @ xs.T  # (n_b, N)
+    if valid_mask is not None:
+        xp = jnp.where(valid_mask[None, :], xp, NEG_INF)
+    yp = b @ ys.T  # (n_b, C)
+    _, idx_x = jax.lax.top_k(xp, cfg.bucket_size_x)
+    _, idx_y = jax.lax.top_k(yp, cfg.bucket_size_y)
+    return idx_x, idx_y
+
+
+def apply_softcap(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def _in_bucket_losses_jnp(
+    x_b: jax.Array,  # (n_b, b_x, d)
+    y_b: jax.Array,  # (n_b, b_y, d)
+    tgt_b: jax.Array,  # (n_b, b_x) int — target catalog id per position
+    cand_ids: jax.Array,  # (n_b, b_y) int — catalog id per bucket candidate
+    pos_logit: jax.Array,  # (n_b, b_x)
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Algorithm 1 lines 12–15 (pure-jnp oracle path).
+
+    Materializes the ``(n_b, b_x, b_y)`` bucket-logit tensor; masks entries
+    where the candidate *is* the position's positive class (those are not
+    negatives — paper: "filled with -inf to block the passage of the
+    gradients"); returns per-(bucket, position) CE loss ``(n_b, b_x)``.
+    """
+    neg = jnp.einsum("nxd,nyd->nxy", x_b, y_b)  # bucket logits
+    neg = apply_softcap(neg, softcap)
+    collide = cand_ids[:, None, :] == tgt_b[:, :, None]
+    neg = jnp.where(collide, NEG_INF, neg)
+    # denominator = exp(pos) + sum_j exp(neg_j)  (paper eq. line 15)
+    all_logits = jnp.concatenate([pos_logit[..., None], neg], axis=-1)
+    lse = jax.nn.logsumexp(all_logits, axis=-1)
+    return lse - pos_logit
+
+
+def aggregate_bucket_losses(
+    losses: jax.Array,  # (n_b, b_x)
+    idx_x: jax.Array,  # (n_b, b_x)
+    n_positions: int,
+    *,
+    valid_mask: Optional[jax.Array] = None,
+):
+    """Algorithm 1 lines 16–17: per-position max over buckets, mean over
+    covered positions.
+
+    A position placed in several buckets keeps the *maximum* loss — the
+    partial catalog sum closest to the full denominator.
+    """
+    flat_idx = idx_x.reshape(-1)
+    flat_loss = losses.reshape(-1)
+    per_pos = jax.ops.segment_max(
+        flat_loss, flat_idx, num_segments=n_positions, indices_are_sorted=False
+    )
+    covered = jax.ops.segment_max(
+        jnp.ones_like(flat_loss), flat_idx, num_segments=n_positions
+    )
+    covered = covered > 0.0
+    if valid_mask is not None:
+        covered = jnp.logical_and(covered, valid_mask)
+    per_pos = jnp.where(covered, per_pos, 0.0)
+    denom = jnp.maximum(jnp.sum(covered.astype(per_pos.dtype)), 1.0)
+    return jnp.sum(per_pos) / denom, covered
+
+
+def sce_loss(
+    x: jax.Array,
+    y: jax.Array,
+    targets: jax.Array,
+    *,
+    key: jax.Array,
+    cfg: SCEConfig,
+    valid_mask: Optional[jax.Array] = None,
+    return_aux: bool = False,
+):
+    """Scalable Cross-Entropy loss (paper Algorithm 1 + optional Mix).
+
+    Args:
+      x: ``(N, d)`` model outputs (flattened ``batch × seq``).
+      y: ``(C, d)`` catalog/vocabulary embeddings.
+      targets: ``(N,)`` int32 — correct class per position.
+      key: PRNG key; a fresh key per step re-draws buckets (the paper notes
+        this acts as a regularizer).
+      cfg: :class:`SCEConfig`.
+      valid_mask: optional ``(N,)`` bool; padding positions are excluded
+        from selection and from the final mean.
+      return_aux: also return a dict with coverage / selection diagnostics
+        (used by the Mix-ablation benchmark, paper Fig. 4).
+
+    Returns:
+      Scalar loss (and aux dict if requested).
+    """
+    n = x.shape[0]
+    b = make_bucket_centers(
+        key, x, cfg.n_buckets, use_mix=cfg.use_mix, valid_mask=valid_mask
+    )
+    idx_x, idx_y = select_buckets(b, x, y, cfg, valid_mask=valid_mask)
+
+    x_b = jnp.take(x, idx_x, axis=0)  # (n_b, b_x, d)
+    y_b = jnp.take(y, idx_y, axis=0)  # (n_b, b_y, d)
+    tgt_b = jnp.take(targets, idx_x, axis=0)  # (n_b, b_x)
+    pos_emb = jnp.take(y, tgt_b, axis=0)  # (n_b, b_x, d)
+    pos_logit = apply_softcap(
+        jnp.einsum("nxd,nxd->nx", x_b, pos_emb), cfg.logit_softcap
+    )
+
+    if cfg.use_kernel and cfg.logit_softcap is None:
+        from repro.kernels import ops as _kops
+
+        losses = _kops.sce_bucket_loss(x_b, y_b, tgt_b, idx_y, pos_logit)
+    else:
+        losses = _in_bucket_losses_jnp(
+            x_b, y_b, tgt_b, idx_y, pos_logit, softcap=cfg.logit_softcap
+        )
+
+    loss, covered = aggregate_bucket_losses(
+        losses, idx_x, n, valid_mask=valid_mask
+    )
+    if not return_aux:
+        return loss
+
+    # Diagnostics (paper Fig. 4a/4b).
+    flat = idx_x.reshape(-1)
+    counts = jnp.zeros((n,), jnp.int32).at[flat].add(1)
+    n_selected = jnp.sum(counts > 0)
+    unique_frac = jnp.sum(counts == 1) / jnp.maximum(n_selected, 1)
+    collide = idx_y[:, None, :] == tgt_b[:, :, None]  # (n_b, b_x, b_y)
+    correct_frac = jnp.sum(jnp.any(collide, axis=-1)) / flat.shape[0]
+    aux = {
+        "covered_frac": jnp.mean(covered.astype(jnp.float32)),
+        "unique_selection_frac": unique_frac,
+        "correct_class_logit_frac": correct_frac,
+        "n_selected": n_selected,
+    }
+    return loss, aux
+
+
+def sce_loss_memory_bytes(cfg: SCEConfig, dtype_bytes: int = 4) -> int:
+    """Analytic peak bytes of the loss-side tensors (paper §3.1)."""
+    return cfg.logit_tensor_elements() * dtype_bytes
+
+
+def full_ce_memory_bytes(n_positions: int, catalog: int, dtype_bytes: int = 4) -> int:
+    return n_positions * catalog * dtype_bytes

@@ -1,0 +1,23 @@
+"""Data substrate: synthetic-but-learnable generators for every model
+family, all driven by a deterministic, checkpointable cursor."""
+from repro.data.pipeline import Cursor
+from repro.data.sequences import SeqDataConfig, SequenceDataset
+from repro.data.clickstream import ClickDataConfig, ClickstreamDataset
+from repro.data.graphs import (
+    GraphDataConfig,
+    random_graph,
+    batched_molecules,
+    NeighborSampler,
+)
+
+__all__ = [
+    "Cursor",
+    "SeqDataConfig",
+    "SequenceDataset",
+    "ClickDataConfig",
+    "ClickstreamDataset",
+    "GraphDataConfig",
+    "random_graph",
+    "batched_molecules",
+    "NeighborSampler",
+]

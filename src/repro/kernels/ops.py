@@ -1,0 +1,104 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs as traced JAX ops for bit-accurate validation. On a
+real TPU backend they compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_ce as _fused_ce
+from repro.kernels import ref as _ref
+from repro.kernels import sce_bucket as _sce_bucket
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _inside_shard_map(*arrays) -> bool:
+    """True if any operand carries varying-manual-axes (i.e. we are being
+    traced inside ``jax.shard_map``)."""
+    for a in arrays:
+        try:
+            if jax.typeof(a).vma:
+                return True
+        except (AttributeError, TypeError):
+            pass
+    return False
+
+
+def sce_bucket_loss(
+    x_b,
+    y_b,
+    tgt_b,
+    cand_ids,
+    pos_logit,
+    *,
+    block_bx: int = 128,
+    block_by: int = 256,
+    interpret: bool | None = None,
+):
+    """Fused in-bucket SCE losses (n_b, b_x). See kernels/sce_bucket.py."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if interpret and _inside_shard_map(x_b, y_b, pos_logit):
+        # Pallas interpret-mode (hlo_interpreter) cannot yet run inside
+        # shard_map with VMA checking (jax 0.8 limitation); the pure-jnp
+        # oracle is numerically identical. On TPU the kernel runs as-is.
+        return _ref.sce_bucket_loss_ref(x_b, y_b, tgt_b, cand_ids, pos_logit)
+    return _sce_bucket.sce_bucket_loss(
+        x_b, y_b, tgt_b, cand_ids, pos_logit, block_bx, block_by, interpret
+    )
+
+
+def sce_bucket_plse(
+    x_b,
+    y_b,
+    tgt_b,
+    cand_ids,
+    *,
+    block_bx: int = 128,
+    block_by: int = 256,
+    interpret: bool | None = None,
+):
+    """Partial in-bucket logsumexp (union-mode building block), (n_b, b_x)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if interpret and _inside_shard_map(x_b, y_b):
+        return _ref.sce_bucket_plse_ref(x_b, y_b, tgt_b, cand_ids)
+    return _sce_bucket.sce_bucket_plse(
+        x_b, y_b, tgt_b, cand_ids, block_bx, block_by, interpret
+    )
+
+
+def fused_lse(
+    x, y, *, block_n: int = 256, block_c: int = 512, interpret: bool | None = None
+):
+    """Streaming full-catalog logsumexp (N,). See kernels/fused_ce.py."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if interpret and _inside_shard_map(x, y):
+        return _ref.fused_lse_ref(x, y)
+    return _fused_ce.fused_lse(x, y, block_n, block_c, interpret)
+
+
+def fused_ce_loss(
+    x,
+    y,
+    targets,
+    *,
+    block_n: int = 256,
+    block_c: int = 512,
+    interpret: bool | None = None,
+):
+    """Streaming per-position full-CE loss (N,)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if interpret and _inside_shard_map(x, y):
+        return _ref.fused_ce_loss_ref(x, y, targets)
+    return _fused_ce.fused_ce_loss(x, y, targets, block_n, block_c, interpret)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels are tested against (allclose sweeps
+over shapes and dtypes in tests/test_kernels.py). They intentionally
+materialize the full logit tensors — memory-hungry but simple.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def sce_bucket_loss_ref(
+    x_b: jax.Array,  # (n_b, b_x, d)
+    y_b: jax.Array,  # (n_b, b_y, d)
+    tgt_b: jax.Array,  # (n_b, b_x) int32 target catalog ids
+    cand_ids: jax.Array,  # (n_b, b_y) int32 bucket-candidate catalog ids
+    pos_logit: jax.Array,  # (n_b, b_x)
+) -> jax.Array:
+    """In-bucket CE (Algorithm 1, lines 12–15). Returns (n_b, b_x) losses.
+
+    ``loss = logsumexp([pos, negs]) - pos`` with candidates equal to the
+    position's target masked out of the negative set.
+    """
+    f32 = jnp.float32
+    neg = jnp.einsum(
+        "nxd,nyd->nxy", x_b.astype(f32), y_b.astype(f32)
+    )
+    collide = cand_ids[:, None, :] == tgt_b[:, :, None]
+    neg = jnp.where(collide, NEG_INF, neg)
+    pos = pos_logit.astype(f32)
+    m = jnp.maximum(jnp.max(neg, axis=-1), pos)
+    s = jnp.sum(jnp.exp(neg - m[..., None]), axis=-1) + jnp.exp(pos - m)
+    return (m + jnp.log(s) - pos).astype(pos_logit.dtype)
+
+
+def sce_bucket_plse_ref(
+    x_b: jax.Array,  # (n_b, b_x, d)
+    y_b: jax.Array,  # (n_b, b_y, d)
+    tgt_b: jax.Array,  # (n_b, b_x) int32
+    cand_ids: jax.Array,  # (n_b, b_y) int32
+) -> jax.Array:
+    """Partial logsumexp over in-bucket negatives (collision-masked, no
+    positive term) — the union-mode building block. → (n_b, b_x) f32."""
+    f32 = jnp.float32
+    neg = jnp.einsum("nxd,nyd->nxy", x_b.astype(f32), y_b.astype(f32))
+    collide = cand_ids[:, None, :] == tgt_b[:, :, None]
+    neg = jnp.where(collide, NEG_INF, neg)
+    m = jnp.max(neg, axis=-1)
+    s = jnp.sum(jnp.exp(neg - m[..., None]), axis=-1)
+    return m + jnp.log(jnp.maximum(s, 1e-30))
+
+
+def fused_lse_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Full-catalog logsumexp per position. x: (N, d), y: (C, d) → (N,)."""
+    logits = x.astype(jnp.float32) @ y.astype(jnp.float32).T
+    return jax.nn.logsumexp(logits, axis=-1).astype(x.dtype)
+
+
+def fused_ce_loss_ref(x: jax.Array, y: jax.Array, targets: jax.Array) -> jax.Array:
+    """Per-position full-CE loss. Returns (N,)."""
+    lse = fused_lse_ref(x, y)
+    pos = jnp.einsum(
+        "nd,nd->n",
+        x.astype(jnp.float32),
+        jnp.take(y, targets, axis=0).astype(jnp.float32),
+    )
+    return (lse.astype(jnp.float32) - pos).astype(x.dtype)

@@ -1,0 +1,2 @@
+"""Launchers: production meshes, AOT dry-run, fault-tolerant training,
+batched serving."""

@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod AOT dry-run (task deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+  ``jax.jit(step, in_shardings, out_shardings).lower(*abstract).compile()``
+then record, per cell:
+  * ``compiled.memory_analysis()``  — proves the cell fits per-device HBM;
+  * ``compiled.cost_analysis()``    — HLO FLOPs / bytes for §Roofline;
+  * collective bytes parsed from the post-partitioning HLO
+    (``compiled.as_text()``) — all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute, with per-device wire-byte modelling.
+
+Results land in one JSON per cell under ``results/dryrun/`` — the
+roofline benchmark (benchmarks/roofline.py) reads them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+      --shape train_4k --mesh multi
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join("results", "dryrun")
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g. "f32[256,4096]{1,0}" or "bf16[2,8]" — capture dtype and dims
+_SHAPE_RE = re.compile(r"(pred|s4|s8|s16|s32|s64|u8|u16|u32|u64|f8\w*|bf16|f16|f32|f64|c64|c128)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+    "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_BRACES_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for dim in dims.split(","):
+            if dim:
+                n *= int(dim)
+        total += n * _DTYPE_BYTES.get(dtype.split("e")[0], 4)
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_BRACES_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_bytes(hlo_text: str, n_devices: int):
+    """Per-device wire bytes of every collective in the compiled HLO.
+
+    Ring-algorithm models (standard on ICI):
+      all-reduce       2·S·(g-1)/g      (reduce-scatter + all-gather)
+      all-gather       S·(g-1)/g        (S = full output size)
+      reduce-scatter   S_out·(g-1)      (per-device shard received g-1×)
+      all-to-all       S·(g-1)/g
+      collective-permute  S
+    """
+    per_op = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # match "  %name = <shape> <op>(" or fusion-wrapped starts
+        for op in _COLLECTIVES:
+            if f" {op}(" in stripped or f" {op}-start(" in stripped:
+                lhs = stripped.split(f"= ")
+                shape_txt = lhs[1].split("(")[0] if len(lhs) > 1 else stripped
+                size = _shape_bytes(shape_txt)
+                g = _group_size(stripped, default=n_devices)
+                if op == "all-reduce":
+                    wire = 2 * size * (g - 1) / max(g, 1)
+                elif op == "all-gather":
+                    wire = size * (g - 1) / max(g, 1)
+                elif op == "reduce-scatter":
+                    wire = size * (g - 1)
+                elif op == "all-to-all":
+                    wire = size * (g - 1) / max(g, 1)
+                else:  # collective-permute
+                    wire = size
+                per_op[op] += wire
+                counts[op] += 1
+                break
+    total = sum(per_op.values())
+    return {"total_bytes": total, "per_op_bytes": per_op, "counts": counts}
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str) -> dict:
+    from repro.launch.cells import build_cell  # after XLA_FLAGS
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.size
+    t0 = time.time()
+    cell = build_cell(arch_name, shape_name, mesh)
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo, n_dev)
+
+    rec = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "n_devices": n_dev,
+        "meta": cell.meta,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            # args + temp, minus donated aliases (outputs alias arguments).
+            # NOTE: the CPU backend's buffer assignment double-buffers
+            # while-loop carries and skips some aliasing a TPU build does
+            # — temp_bytes is an upper bound (EXPERIMENTS.md §Dry-run).
+            "peak_bytes": (
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+            ),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+        },
+        "collectives": coll,
+    }
+    return rec
+
+
+def save_record(rec: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.cells import all_cells
+
+    if args.all:
+        targets = [
+            (a, s) for a, s, skip in all_cells() if skip is None
+        ]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        targets = [(args.arch, args.shape)]
+    meshes = (
+        ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    )
+
+    failures = []
+    for arch_name, shape_name in targets:
+        for mesh_kind in meshes:
+            out = os.path.join(
+                RESULTS_DIR, f"{arch_name}__{shape_name}__{mesh_kind}.json"
+            )
+            if args.skip_existing and os.path.exists(out):
+                print(f"[skip] {arch_name} × {shape_name} × {mesh_kind}")
+                continue
+            label = f"{arch_name} × {shape_name} × {mesh_kind}"
+            try:
+                rec = run_cell(arch_name, shape_name, mesh_kind)
+                path = save_record(rec)
+                print(
+                    f"[ok] {label}: "
+                    f"peak={rec['memory']['peak_bytes']/2**30:.2f} GiB/dev "
+                    f"flops={rec['cost']['flops'] or 0:.3g} "
+                    f"coll={rec['collectives']['total_bytes']/2**20:.1f} MiB "
+                    f"({rec['lower_s']}s lower, {rec['compile_s']}s compile)"
+                    f" → {path}"
+                )
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((label, repr(e)))
+                print(f"[FAIL] {label}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for label, err in failures:
+            print(f"  {label}: {err}")
+        return 1
+    print("\nall dry-run cells passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

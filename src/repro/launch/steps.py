@@ -1,0 +1,545 @@
+"""Step-function factories for every (family × shape kind).
+
+A *step* is a pure jit-able function; the cell builder (cells.py) wires
+it to abstract inputs + shardings for the dry-run, and train.py/serve.py
+call the same factories for real execution on the host mesh — one code
+path for both.
+
+Training steps implement (DESIGN.md §4):
+  * microbatched gradient accumulation (``lax.scan``; f32 accumulators,
+    bf16 for the 1T arch);
+  * the SCE loss in one of three modes:
+      - ``"union"``  — shard_map distributed SCE, per-shard candidates +
+        log-space merge (production default for LM archs);
+      - ``"exact"``  — shard_map distributed SCE with exact two-stage
+        MIPS (seqrec default; selection identical to single-device);
+      - ``"gspmd"``  — the paper-literal global-bucket SCE, left to
+        GSPMD to partition (the §Perf baseline);
+  * optional int8 error-feedback gradient compression inside the wrapped
+    optimizer (shrinks the cross-pod DCI payload);
+  * MoE aux load-balance loss folded in.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed_sce import round_up, sce_loss_sharded
+from repro.core.losses import ce_chunked, make_loss
+from repro.core.sce import SCEConfig, sce_loss
+from repro.dist.collectives import distributed_topk
+from repro.dist.sharding import data_axes
+from repro.launch.mesh import dp_size
+from repro.models import bert4rec as b4r_lib
+from repro.models import recsys as recsys_lib
+from repro.models import sasrec as sasrec_lib
+from repro.models import schnet as schnet_lib
+from repro.models import transformer as tf_lib
+from repro.optim import make_optimizer
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+def build_sce_config(
+    n_positions_local: int,
+    catalog: int,
+    *,
+    bucket_size_y: int,
+    tp: int = 1,
+    use_mix: bool = True,
+    use_kernel: bool = True,
+    logit_softcap: Optional[float] = None,
+    alpha: float = 2.0,
+    beta: float = 1.0,
+) -> SCEConfig:
+    """Paper parametrization (§4.2.1) from the per-shard position count,
+    with ``n_b`` rounded up to the model-axis size for even bucket
+    splitting."""
+    cfg = SCEConfig.from_alpha_beta(
+        n_positions_local,
+        catalog,
+        alpha=alpha,
+        beta=beta,
+        bucket_size_y=bucket_size_y,
+        use_mix=use_mix,
+        use_kernel=use_kernel,
+    )
+    import dataclasses
+
+    return dataclasses.replace(
+        cfg,
+        n_buckets=round_up(cfg.n_buckets, tp),
+        logit_softcap=logit_softcap,
+    )
+
+
+def _vocab_loss(
+    x, y, targets, valid, key, *, loss_name, sce_cfg, sce_mode, mesh
+):
+    """Dispatch the LM-head / catalog loss.
+
+    sce_mode: "exact" | "union" (shard_map distributed SCE variants, see
+    core/distributed_sce.py) | "gspmd" (global-bucket paper-literal SCE,
+    partitioned by GSPMD — the §Perf baseline).
+    """
+    if loss_name == "sce":
+        if sce_mode in ("exact", "union") and mesh is not None:
+            return sce_loss_sharded(
+                x, y, targets, key=key, cfg=sce_cfg, mesh=mesh,
+                valid_mask=valid, mode=sce_mode,
+            )
+        return sce_loss(
+            x, y, targets, key=key, cfg=sce_cfg, valid_mask=valid
+        )
+    if loss_name == "ce_chunked":
+        loss, _ = ce_chunked(x, y, targets, valid_mask=valid)
+        return loss
+    fn = make_loss(loss_name)
+    loss, _ = fn(x, y, targets, valid_mask=valid, key=key)
+    return loss
+
+
+def _accumulate_microbatches(
+    loss_and_grad_fn, params, batch, key, n_micro, accum_dtype=jnp.float32
+):
+    """lax.scan over microbatches; mean-accumulated grads in
+    ``accum_dtype`` (f32 default; bf16 for params-dominated giants)."""
+
+    def one(pb_key, mb):
+        mb_key = pb_key
+        loss, grads = loss_and_grad_fn(params, mb, mb_key)
+        return loss, grads
+
+    if n_micro == 1:
+        return one(key, batch)
+
+    stacked = jax.tree.map(
+        lambda a: a.reshape((n_micro, a.shape[0] // n_micro) + a.shape[1:]),
+        batch,
+    )
+
+    def body(carry, inp):
+        acc_loss, acc_grads = carry
+        mb, i = inp
+        loss, grads = loss_and_grad_fn(params, mb, jax.random.fold_in(key, i))
+        acc_grads = jax.tree.map(
+            lambda a, g: a + g.astype(accum_dtype) / n_micro,
+            acc_grads,
+            grads,
+        )
+        return (acc_loss + loss / n_micro, acc_grads), None
+
+    zero_grads = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, accum_dtype), params
+    )
+    (loss, grads), _ = jax.lax.scan(
+        body,
+        (jnp.zeros((), jnp.float32), zero_grads),
+        (stacked, jnp.arange(n_micro)),
+    )
+    grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+    return loss, grads
+
+
+# ---------------------------------------------------------------------------
+# LM transformers
+# ---------------------------------------------------------------------------
+def make_lm_train_step(
+    arch,
+    cfg,
+    mesh,
+    shape,
+    *,
+    sce_mode: str = "union",
+    grad_compression: Optional[str] = None,
+    n_micro_override: Optional[int] = None,
+    bucket_size_y: Optional[int] = None,
+):
+    opt_init, opt_update = make_optimizer(arch.optimizer, 3e-4)
+    if grad_compression == "int8":
+        from repro.optim import with_error_feedback_compression
+
+        opt_init, opt_update = with_error_feedback_compression(
+            (opt_init, opt_update)
+        )
+    gb = shape.dims["global_batch"]
+    seq = shape.dims["seq_len"]
+    dp = dp_size(mesh) if mesh is not None else 1
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    # microbatch count is capped so every microbatch still spans the data
+    # axes (≥1 sequence per shard)
+    requested = n_micro_override or arch.microbatches.get(shape.name, 1)
+    n_micro = max(1, min(requested, gb // dp))
+    # paper-literal GSPMD mode draws GLOBAL buckets over the whole
+    # microbatch, so its (α, β) parametrization uses global positions
+    n_pos = (
+        (gb // n_micro) * seq
+        if sce_mode == "gspmd"
+        else (gb // n_micro // dp) * seq
+    )
+    assert n_pos > 0, (gb, n_micro, dp)
+    sce_cfg = build_sce_config(
+        n_pos,
+        cfg.vocab,
+        bucket_size_y=bucket_size_y or arch.sce_bucket_size_y,
+        tp=tp,
+        logit_softcap=cfg.final_softcap,
+    )
+
+    def loss_and_grad(params, mb, key):
+        def loss_fn(p):
+            hidden, aux = tf_lib.forward(p, cfg, mb["tokens"])
+            x = hidden.reshape(-1, hidden.shape[-1])
+            y = tf_lib.output_embedding(p, cfg)  # padded rows = phantom negs
+            loss = _vocab_loss(
+                x,
+                y,
+                mb["targets"].reshape(-1),
+                mb["valid"].reshape(-1),
+                key,
+                loss_name=arch.train_loss,
+                sce_cfg=sce_cfg,
+                sce_mode=sce_mode,
+                mesh=mesh,
+            )
+            return loss + aux
+        return jax.value_and_grad(loss_fn)(params)
+
+    accum_dtype = jnp.dtype(arch.accum_dtype)
+
+    def train_step(params, opt_state, batch, key):
+        loss, grads = _accumulate_microbatches(
+            loss_and_grad, params, batch, key, n_micro, accum_dtype
+        )
+        # (int8 error-feedback compression, if enabled, lives inside the
+        # wrapped optimizer — see optim.with_error_feedback_compression)
+        new_params, new_opt = opt_update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss}
+
+    return train_step, (opt_init, opt_update), sce_cfg
+
+
+def make_lm_prefill_step(cfg, *, act_spec=None):
+    def prefill_step(params, tokens):
+        hidden, cache = tf_lib.prefill(
+            params, cfg, tokens, act_spec=act_spec
+        )
+        logits = tf_lib.logits_from_hidden(params, cfg, hidden[:, -1:])
+        return logits, cache
+
+    return prefill_step
+
+
+def make_lm_decode_step(cfg):
+    def decode_step(params, cache, tokens, pos):
+        return tf_lib.decode_step(params, cfg, cache, tokens, pos)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sequential recommenders (bert4rec / sasrec — the paper's own domain)
+# ---------------------------------------------------------------------------
+def make_seqrec_train_step(
+    arch, cfg, mesh, shape, *, sce_mode: str = "exact",
+    grad_compression=None,
+):
+    opt_init, opt_update = make_optimizer(arch.optimizer, 1e-3)
+    if grad_compression == "int8":
+        from repro.optim import with_error_feedback_compression
+
+        opt_init, opt_update = with_error_feedback_compression(
+            (opt_init, opt_update)
+        )
+    gb = shape.dims["batch"]
+    seq = cfg.max_len
+    dp = dp_size(mesh) if mesh is not None else 1
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    n_micro = max(1, min(arch.microbatches.get(shape.name, 1), gb // dp))
+    n_pos_local = (gb // n_micro // dp) * seq
+    assert n_pos_local > 0, (gb, n_micro, dp)
+    sce_cfg = build_sce_config(
+        n_pos_local,
+        cfg.n_items,
+        bucket_size_y=arch.sce_bucket_size_y,
+        tp=tp,
+    )
+    bidirectional = not cfg.causal
+
+    def loss_and_grad(params, mb, key):
+        k_mask, k_loss, k_drop = jax.random.split(key, 3)
+
+        def loss_fn(p):
+            tokens = mb["tokens"]
+            if bidirectional:
+                masked, is_masked = b4r_lib.apply_cloze_mask(
+                    k_mask, tokens, cfg
+                )
+                hidden = b4r_lib.forward(p, cfg, masked)
+                targets = tokens.reshape(-1)
+                valid = is_masked.reshape(-1)
+            else:
+                hidden = sasrec_lib.forward(p, cfg, tokens)
+                targets = mb["targets"].reshape(-1)
+                valid = mb["valid"].reshape(-1)
+            x = hidden.reshape(-1, hidden.shape[-1])
+            y = sasrec_lib.loss_catalog(p, cfg)  # shard-even slice
+            return _vocab_loss(
+                x, y, targets, valid, k_loss,
+                loss_name=arch.train_loss,
+                sce_cfg=sce_cfg,
+                sce_mode=sce_mode,
+                mesh=mesh,
+            )
+
+        return jax.value_and_grad(loss_fn)(params)
+
+    def train_step(params, opt_state, batch, key):
+        loss, grads = _accumulate_microbatches(
+            loss_and_grad, params, batch, key, n_micro
+        )
+        new_params, new_opt = opt_update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss}
+
+    return train_step, (opt_init, opt_update), sce_cfg
+
+
+def make_seqrec_serve_step(arch, cfg, mesh, *, top_k: int = 100,
+                           batch_chunk: int = 2048):
+    """Score user states against the (vocab-parallel) catalog and return
+    the top-k items — shard_map two-stage top-k, chunked over the batch
+    so the per-chunk score slice stays small (DESIGN.md §4)."""
+    bidirectional = not cfg.causal
+    dp = data_axes(mesh) if mesh is not None else ()
+
+    def serve_step(params, tokens):
+        hidden = (
+            b4r_lib.forward(params, cfg, tokens)
+            if bidirectional
+            else sasrec_lib.forward(params, cfg, tokens)
+        )
+        x_last = hidden[:, -1]  # (B, d)
+        y = sasrec_lib.loss_catalog(params, cfg)  # shard-even slice
+        c_pad = cfg.catalog_loss_size
+
+        if mesh is None:
+            scores = x_last @ y.T
+            ids = jnp.arange(c_pad)
+            scores = jnp.where(ids[None, :] < cfg.n_items, scores, NEG_INF)
+            vals, idx = jax.lax.top_k(scores, top_k)
+            return vals, idx
+
+        def inner(x_l, y_l):
+            b_l = x_l.shape[0]
+            c_local = y_l.shape[0]
+            shard = jax.lax.axis_index("model")
+            # phantom (padding / mask-token) rows never serve
+            gids = shard * c_local + jnp.arange(c_local)
+            phantom = gids >= cfg.n_items
+            chunk = min(batch_chunk, b_l)
+            n_chunks = -(-b_l // chunk)
+            pad = n_chunks * chunk - b_l
+            xp = jnp.pad(x_l, ((0, pad), (0, 0))).reshape(
+                n_chunks, chunk, -1
+            )
+
+            def score_chunk(xc):
+                s = xc @ y_l.T  # (chunk, C_local)
+                s = jnp.where(phantom[None, :], NEG_INF, s)
+                vals, idx, _ = distributed_topk(s, top_k, "model")
+                return vals, idx
+
+            vals, idx = jax.lax.map(score_chunk, xp)
+            # (distributed_topk already replicates over 'model')
+            vals = vals.reshape(-1, top_k)[:b_l]
+            idx = idx.reshape(-1, top_k)[:b_l]
+            return vals, idx
+
+        fn = jax.shard_map(
+            inner,
+            mesh=mesh,
+            in_specs=(P(dp, None), P("model", None)),
+            out_specs=(P(dp, None), P(dp, None)),
+        )
+        return fn(x_last, y)
+
+    return serve_step
+
+
+def make_seqrec_retrieval_step(arch, cfg, mesh, *, top_k: int = 100):
+    """One user state vs a candidate list (≈ the catalog): masked local
+    scoring + pmax over the model axis — each candidate is owned by
+    exactly one shard, so the pmax assembles exact scores."""
+    bidirectional = not cfg.causal
+
+    def retrieval_step(params, tokens, candidate_ids):
+        hidden = (
+            b4r_lib.forward(params, cfg, tokens)
+            if bidirectional
+            else sasrec_lib.forward(params, cfg, tokens)
+        )
+        x_last = hidden[:, -1]  # (B, d) — B is 1 for retrieval_cand
+        y = sasrec_lib.loss_catalog(params, cfg)  # shard-even; candidates
+        # are real item ids, so phantom rows are never gathered.
+
+        if mesh is None:
+            cand = jnp.take(y, candidate_ids, axis=0)
+            scores = x_last @ cand.T
+            vals, idx = jax.lax.top_k(scores, top_k)
+            return vals, idx
+
+        def inner(x_g, y_l, cand_ids):
+            c_local = y_l.shape[0]
+            shard = jax.lax.axis_index("model")
+            local = cand_ids - shard * c_local
+            ok = (local >= 0) & (local < c_local)
+            rows = jnp.take(y_l, jnp.clip(local, 0, c_local - 1), axis=0)
+            scores = x_g @ rows.T  # (B, n_cand)
+            scores = jnp.where(ok[None, :], scores, NEG_INF)
+            scores = jax.lax.pmax(scores, "model")  # owner-exact + replicated
+            vals, idx = jax.lax.top_k(scores, top_k)
+            return vals, idx
+
+        fn = jax.shard_map(
+            inner,
+            mesh=mesh,
+            in_specs=(P(), P("model", None), P()),
+            out_specs=(P(), P()),
+        )
+        return fn(x_last, y, candidate_ids)
+
+    return retrieval_step
+
+
+# ---------------------------------------------------------------------------
+# CTR recsys (DCN-v2 / DLRM / xDeepFM)
+# ---------------------------------------------------------------------------
+_RECSYS_FWD = {
+    "dcn-v2": recsys_lib.dcn_v2_forward,
+    "dlrm-rm2": recsys_lib.dlrm_forward,
+    "xdeepfm": recsys_lib.xdeepfm_forward,
+}
+
+
+def recsys_forward_fn(arch_name: str) -> Callable:
+    return _RECSYS_FWD[arch_name]
+
+
+def make_recsys_train_step(arch, cfg, mesh, shape, *,
+                           grad_compression=None):
+    opt_init, opt_update = make_optimizer(arch.optimizer, 1e-3)
+    if grad_compression == "int8":
+        from repro.optim import with_error_feedback_compression
+
+        opt_init, opt_update = with_error_feedback_compression(
+            (opt_init, opt_update)
+        )
+    fwd = recsys_forward_fn(arch.name)
+    n_micro = arch.microbatches.get(shape.name, 1)
+
+    def loss_and_grad(params, mb, key):
+        def loss_fn(p):
+            logits = fwd(p, cfg, mb["dense"], mb["sparse_ids"])
+            return recsys_lib.bce_logits_loss(logits, mb["labels"])
+
+        return jax.value_and_grad(loss_fn)(params)
+
+    def train_step(params, opt_state, batch, key):
+        loss, grads = _accumulate_microbatches(
+            loss_and_grad, params, batch, key, n_micro
+        )
+        new_params, new_opt = opt_update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss}
+
+    return train_step, (opt_init, opt_update)
+
+
+def make_recsys_serve_step(arch, cfg):
+    fwd = recsys_forward_fn(arch.name)
+
+    def serve_step(params, dense, sparse_ids):
+        return jax.nn.sigmoid(fwd(params, cfg, dense, sparse_ids))
+
+    return serve_step
+
+
+def make_recsys_retrieval_step(arch, cfg, *, item_field: int = 0,
+                               chunk: int = 4096, top_k: int = 100):
+    # chunk=4096 keeps the per-chunk interaction tensor bounded — at 65536
+    # xDeepFM's CIN outer product is (chunk, 200, 39, 10) f32 ≈ 20 GiB
+    fwd = recsys_forward_fn(arch.name)
+
+    def retrieval_step(params, dense_user, sparse_user, candidate_ids):
+        scores = recsys_lib.retrieval_scores(
+            fwd, params, cfg, dense_user, sparse_user, candidate_ids,
+            item_field=item_field, chunk=chunk,
+        )
+        vals, idx = jax.lax.top_k(scores, top_k)
+        return vals, idx
+
+    return retrieval_step
+
+
+# ---------------------------------------------------------------------------
+# GNN (SchNet)
+# ---------------------------------------------------------------------------
+def make_gnn_train_step(arch, cfg, mesh, shape):
+    opt_init, opt_update = make_optimizer(arch.optimizer, 1e-3)
+    kind = shape.kind
+    n_graphs = int(shape.dims.get("batch", 1))  # static (molecule shape)
+
+    def loss_and_grad(params, batch, key):
+        def loss_fn(p):
+            if kind == "train_sampled":
+                e, _ = schnet_lib.node_energies(
+                    p,
+                    cfg,
+                    batch["node_feats"],
+                    batch["positions"],
+                    batch["edge_index"],
+                    edge_valid=batch["edge_valid"],
+                )
+                pred = jnp.take(e, batch["seed_local"], axis=0)
+                err = jnp.square(pred - batch["targets"])
+                return jnp.mean(err)
+            if "graph_ids" in batch:  # batched molecules → per-graph
+                energy, _ = schnet_lib.forward(
+                    p,
+                    cfg,
+                    batch["node_feats"],
+                    batch["positions"],
+                    batch["edge_index"],
+                    batch["graph_ids"],
+                    n_graphs,
+                )
+                return jnp.mean(jnp.square(energy - batch["targets"]))
+            # full-batch node regression (padded nodes/edges masked out)
+            e, _ = schnet_lib.node_energies(
+                p,
+                cfg,
+                batch["node_feats"],
+                batch["positions"],
+                batch["edge_index"],
+                edge_valid=batch.get("edge_valid"),
+            )
+            err = jnp.square(e - batch["targets"])
+            if "node_valid" in batch:
+                w = batch["node_valid"].astype(err.dtype)
+                return jnp.sum(err * w) / jnp.maximum(jnp.sum(w), 1.0)
+            return jnp.mean(err)
+
+        return jax.value_and_grad(loss_fn)(params)
+
+    def train_step(params, opt_state, batch, key):
+        loss, grads = loss_and_grad(params, batch, key)
+        new_params, new_opt = opt_update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss}
+
+    return train_step, (opt_init, opt_update)

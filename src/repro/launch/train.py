@@ -1,0 +1,283 @@
+"""Fault-tolerant training driver (DESIGN.md §4).
+
+The same step factories the dry-run lowers are executed here with real
+arrays. Production behavior:
+
+  * **auto-restore**: on start, the latest valid checkpoint (params, opt
+    state, PRNG key, data cursor) is restored; a crashed job relaunches
+    and continues from the last atomic commit.
+  * **async checkpointing** every ``--ckpt-every`` steps (host snapshot +
+    background write; the step loop never blocks on I/O).
+  * **straggler watchdog**: steps slower than ``watchdog × median`` are
+    logged; with ``--skip-stragglers`` the *data load* of the next step
+    reuses the previous host batch (bounded staleness) instead of
+    blocking on a slow input shard.
+  * **elastic restart**: checkpoints are host-gathered, so ``--ckpt-dir``
+    written on one mesh restores onto any other (see CheckpointManager).
+  * optional **int8 error-feedback gradient compression** models the
+    cross-pod DCI payload (--grad-compression int8).
+
+On this CPU container, ``--smoke`` selects each arch's reduced config so
+the loop actually trains; the full configs are exercised via dryrun.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch sasrec-sce --smoke \
+      --steps 50 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import statistics
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_arch
+from repro.data import (
+    ClickDataConfig,
+    ClickstreamDataset,
+    Cursor,
+    SeqDataConfig,
+    SequenceDataset,
+    batched_molecules,
+)
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_host_mesh
+
+
+@dataclasses.dataclass
+class SmokeShape:
+    """Reduced stand-in for a ShapeSpec (CPU-runnable)."""
+
+    name: str
+    kind: str
+    dims: Dict[str, int]
+
+
+def _smoke_setup(arch, batch: int, seq_len: int):
+    """(model cfg, shape, data source) for a CPU-runnable training run."""
+    cfg = arch.make_smoke_config()
+    if arch.family == "lm":
+        shape = SmokeShape("train_smoke", "train",
+                           {"global_batch": batch, "seq_len": seq_len})
+        data = SequenceDataset(SeqDataConfig(
+            n_items=cfg.vocab, seq_len=seq_len, batch_size=batch,
+            min_len_frac=1.0,
+        ))
+        return cfg, shape, data
+    if arch.family == "seqrec":
+        shape = SmokeShape("train_smoke", "train", {"batch": batch})
+        data = SequenceDataset(SeqDataConfig(
+            n_items=cfg.n_items, seq_len=cfg.max_len, batch_size=batch,
+        ))
+        return cfg, shape, data
+    if arch.family == "recsys":
+        shape = SmokeShape("train_smoke", "train", {"batch": batch})
+        data = ClickstreamDataset(ClickDataConfig(
+            vocab_sizes=cfg.vocab_sizes, batch_size=batch,
+            n_dense=getattr(cfg, "n_dense", 1),
+        ))
+        return cfg, shape, data
+    # gnn (molecule regime for smoke)
+    shape = SmokeShape("molecule", "train",
+                       {"batch": batch, "n_nodes": 10, "n_edges": 20,
+                        "d_feat": cfg.d_feat})
+    return cfg, shape, None
+
+
+def _init_params(arch, cfg, key):
+    from repro.models import bert4rec as b4r
+    from repro.models import recsys as recsys_lib
+    from repro.models import sasrec, schnet, transformer
+
+    if arch.family == "lm":
+        return transformer.init_params(key, cfg)
+    if arch.family == "seqrec":
+        return (b4r if not cfg.causal else sasrec).init_params(key, cfg)
+    if arch.family == "recsys":
+        init = {
+            "dcn-v2": recsys_lib.init_dcn_v2,
+            "dlrm-rm2": recsys_lib.init_dlrm,
+            "xdeepfm": recsys_lib.init_xdeepfm,
+        }[arch.name]
+        return init(key, cfg)
+    return schnet.init_params(key, cfg)
+
+
+def _make_step(arch, cfg, mesh, shape, sce_mode, grad_compression=None):
+    if arch.family == "lm":
+        step, opt, _ = steps_lib.make_lm_train_step(
+            arch, cfg, mesh, shape, sce_mode=sce_mode,
+            grad_compression=grad_compression,
+        )
+    elif arch.family == "seqrec":
+        step, opt, _ = steps_lib.make_seqrec_train_step(
+            arch, cfg, mesh, shape, sce_mode=sce_mode,
+            grad_compression=grad_compression,
+        )
+    elif arch.family == "recsys":
+        step, opt = steps_lib.make_recsys_train_step(
+            arch, cfg, mesh, shape, grad_compression=grad_compression
+        )
+    else:
+        step, opt = steps_lib.make_gnn_train_step(arch, cfg, mesh, shape)
+    return step, opt
+
+
+def _host_batch(arch, data, cursor, shape, cfg):
+    if arch.family == "gnn":
+        return batched_molecules(
+            cursor,
+            n_mols=shape.dims["batch"],
+            nodes_per_mol=shape.dims["n_nodes"],
+            edges_per_mol=shape.dims["n_edges"],
+            d_feat=shape.dims["d_feat"],
+        )
+    batch, cur = data.next_batch(cursor)
+    if arch.family == "seqrec" and not getattr(cfg, "causal", True):
+        batch = {"tokens": batch["tokens"]}  # bert4rec masks in-step
+    return batch, cur
+
+
+def train(
+    arch_name: str,
+    *,
+    steps: int = 50,
+    batch: int = 8,
+    seq_len: int = 32,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 20,
+    keep_n: int = 3,
+    seed: int = 0,
+    sce_mode: str = "exact",
+    grad_compression: Optional[str] = None,
+    watchdog: float = 5.0,
+    skip_stragglers: bool = False,
+    log_every: int = 10,
+) -> Dict[str, Any]:
+    """Run a real (smoke-scale) training loop; returns final metrics."""
+    arch = get_arch(arch_name)
+    mesh = make_host_mesh()
+    cfg, shape, data = _smoke_setup(arch, batch, seq_len)
+    step_fn, (opt_init, _) = _make_step(
+        arch, cfg, mesh, shape, sce_mode, grad_compression
+    )
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    key = jax.random.PRNGKey(seed)
+    params = _init_params(arch, cfg, key)
+    opt_state = opt_init(params)
+    cursor = Cursor(seed=seed)
+    start_step = 0
+    mgr = CheckpointManager(ckpt_dir, keep_n=keep_n) if ckpt_dir else None
+    if mgr is not None:
+        last, state = mgr.restore_latest()
+        if last is not None:
+            params = state["params"]
+            opt_state = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(opt_state),
+                jax.tree_util.tree_leaves(state["opt_state"]),
+            )
+            key = state["key"]
+            cursor = Cursor.from_state(state["cursor"])
+            start_step = int(state["step"]) + 1
+            print(f"[restore] resumed from step {last}")
+
+    losses, times = [], []
+    prev_batch = None
+    with jax.set_mesh(mesh):
+        for step in range(start_step, steps):
+            t0 = time.time()
+            host_batch, new_cursor = _host_batch(
+                arch, data, cursor, shape, cfg
+            )
+            t_data = time.time() - t0
+            # Straggler mitigation: if data loading stalls, reuse the
+            # previous batch (bounded staleness) instead of blocking.
+            if (
+                skip_stragglers
+                and prev_batch is not None
+                and times
+                and t_data > watchdog * statistics.median(times)
+            ):
+                host_batch = prev_batch
+                print(f"[watchdog] step {step}: slow input shard "
+                      f"({t_data:.2f}s) — reusing previous batch")
+            else:
+                cursor = new_cursor
+                prev_batch = host_batch
+
+            key, step_key = jax.random.split(key)
+            dev_batch = jax.tree.map(jnp.asarray, host_batch)
+            params, opt_state, metrics = jit_step(
+                params, opt_state, dev_batch, step_key
+            )
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            losses.append(loss)
+            times.append(dt)
+            if times and dt > watchdog * statistics.median(times):
+                print(f"[watchdog] step {step} took {dt:.2f}s "
+                      f"(median {statistics.median(times):.2f}s)")
+            if step % log_every == 0:
+                print(f"step {step:5d}  loss {loss:.4f}  {dt*1e3:.0f} ms")
+            if mgr is not None and (step + 1) % ckpt_every == 0:
+                mgr.save(
+                    step,
+                    {
+                        "params": params,
+                        "opt_state": opt_state,
+                        "key": key,
+                        "cursor": cursor.to_state(),
+                        "step": step,
+                    },
+                    blocking=False,
+                )
+    if mgr is not None:
+        mgr.wait()
+    return {
+        "first_loss": losses[0] if losses else None,
+        "final_loss": losses[-1] if losses else None,
+        "steps": len(losses),
+        "mean_step_s": statistics.mean(times) if times else None,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sce-mode", default="exact",
+                    choices=["exact", "union", "gspmd"])
+    ap.add_argument("--grad-compression", choices=["int8"])
+    ap.add_argument("--skip-stragglers", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="(default behaviour; flag kept for symmetry)")
+    args = ap.parse_args()
+    out = train(
+        args.arch,
+        steps=args.steps,
+        batch=args.batch,
+        seq_len=args.seq_len,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        seed=args.seed,
+        sce_mode=args.sce_mode,
+        grad_compression=args.grad_compression,
+        skip_stragglers=args.skip_stragglers,
+    )
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

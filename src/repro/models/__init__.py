@@ -1,0 +1,1 @@
+"""Model zoo: LM transformers, sequential recommenders, GNN, CTR models."""

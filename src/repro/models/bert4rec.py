@@ -1,0 +1,85 @@
+"""BERT4Rec (Sun et al. 2019) — bidirectional encoder over item sequences
+trained with masked-item prediction (Cloze objective).
+
+Reuses the SeqRec encoder with ``causal=False`` and one extra [MASK]
+token. The masked-position CE over the catalog is exactly the loss the SCE
+paper targets — with a 1M-item catalog this model is the framework's
+native showcase for the paper's technique (DESIGN.md §5).
+
+Assigned config: embed_dim=64, n_blocks=2, n_heads=2, seq_len=200
+[arXiv:1904.06690].
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sasrec import (
+    SeqRecConfig,
+    forward as _encoder_forward,
+    init_params as _init_params,
+)
+
+
+def make_config(
+    n_items: int,
+    max_len: int = 200,
+    d_model: int = 64,
+    n_layers: int = 2,
+    n_heads: int = 2,
+    dropout: float = 0.1,
+    dtype: str = "float32",
+) -> SeqRecConfig:
+    return SeqRecConfig(
+        n_items=n_items,
+        max_len=max_len,
+        d_model=d_model,
+        n_layers=n_layers,
+        n_heads=n_heads,
+        dropout=dropout,
+        causal=False,
+        n_extra_tokens=1,  # [MASK]
+        dtype=dtype,
+    )
+
+
+def mask_token_id(cfg: SeqRecConfig) -> int:
+    return cfg.n_items  # the extra embedding row
+
+
+def init_params(key, cfg: SeqRecConfig):
+    return _init_params(key, cfg)
+
+
+def apply_cloze_mask(
+    key, tokens: jax.Array, cfg: SeqRecConfig, mask_prob: float = 0.15
+) -> Tuple[jax.Array, jax.Array]:
+    """Randomly replace items with [MASK]; returns (masked_tokens, is_masked).
+
+    Padding (id 0) is never masked.
+    """
+    rand = jax.random.uniform(key, tokens.shape)
+    is_masked = (rand < mask_prob) & (tokens != 0)
+    masked = jnp.where(is_masked, mask_token_id(cfg), tokens)
+    return masked, is_masked
+
+
+def forward(params, cfg: SeqRecConfig, tokens, *, dropout_key=None):
+    """tokens: (B, L) (already cloze-masked for training) → (B, L, D)."""
+    return _encoder_forward(params, cfg, tokens, dropout_key=dropout_key)
+
+
+def item_embeddings(params, cfg: SeqRecConfig):
+    return params["item_emb"][: cfg.n_items]
+
+
+def retrieval_scores(params, cfg: SeqRecConfig, hidden_state, candidate_ids):
+    """Score one (or few) user states against a candidate set.
+
+    hidden_state: (B, D); candidate_ids: (N_cand,) → (B, N_cand) — a single
+    batched matmul, NOT a loop (retrieval_cand shape: B=1, N_cand=10^6).
+    """
+    cand_emb = jnp.take(params["item_emb"], candidate_ids, axis=0)
+    return hidden_state @ cand_emb.T

@@ -1,0 +1,163 @@
+"""Mixture-of-Experts FFN — GShard-style token-choice top-k routing with
+per-sequence capacity, expressed entirely in gather/scatter/einsum so GSPMD
+can partition it (experts sharded over the ``model`` mesh axis, tokens over
+``data``; the dispatch gather is local to each data shard by construction).
+
+Dispatch algorithm (per batch row, capacity C = L·top_k·cf / E):
+  1. router logits → top-k experts + probs per token;
+  2. rank each (token, k) assignment within its expert via sort + exclusive
+     cumsum of expert counts (O(S log S), no (S, E) one-hot cumsum);
+  3. assignments with rank ≥ C are dropped (out-of-bounds scatter `drop`
+     mode — the standard capacity-dropping semantics);
+  4. gather tokens into an (E, C, D) dispatch buffer, run the expert SwiGLU
+     as one grouped einsum, scatter-add back weighted by router probs.
+
+Aux load-balancing loss follows Switch Transformer (§2.2 of 2101.03961).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden size
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    n_shared_experts: int = 0  # always-on experts (DeepSeek/Kimi style)
+    # Expert weights padded so the EP-sharded dim divides the model axis
+    # (e.g. granite's 40 experts pad to 48 on a 16-way mesh). Phantom
+    # experts get no router outputs and no tokens.
+    expert_pad_multiple: int = 16
+
+    @property
+    def n_experts_padded(self) -> int:
+        m = self.expert_pad_multiple
+        return -(-self.n_experts // m) * m
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32):
+    k_r, k_g, k_u, k_d, k_s = jax.random.split(key, 5)
+    e, f = cfg.n_experts_padded, cfg.d_ff
+    params = {
+        "router": dense_init(k_r, (d_model, cfg.n_experts), dtype=jnp.float32),
+        "w_gate": dense_init(k_g, (e, d_model, f), dtype=dtype),
+        "w_up": dense_init(k_u, (e, d_model, f), dtype=dtype),
+        "w_down": dense_init(k_d, (e, f, d_model), dtype=dtype),
+    }
+    if cfg.n_shared_experts:
+        ks1, ks2, ks3 = jax.random.split(k_s, 3)
+        fs = f * cfg.n_shared_experts
+        params["shared"] = {
+            "w_gate": dense_init(ks1, (d_model, fs), dtype=dtype),
+            "w_up": dense_init(ks2, (d_model, fs), dtype=dtype),
+            "w_down": dense_init(ks3, (fs, d_model), dtype=dtype),
+        }
+    return params
+
+
+def _rank_within_expert(expert_ids: jax.Array, n_experts: int) -> jax.Array:
+    """Rank of each assignment within its expert's queue. (S,) int32."""
+    s = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids, stable=True)  # slots sorted by expert
+    sorted_eids = expert_ids[order]
+    counts = jnp.bincount(expert_ids, length=n_experts)
+    starts = jnp.cumsum(counts) - counts  # exclusive cumsum
+    ranks_sorted = jnp.arange(s, dtype=jnp.int32) - starts[sorted_eids]
+    ranks = jnp.zeros((s,), jnp.int32).at[order].set(ranks_sorted)
+    return ranks
+
+
+def _dispatch_one_row(x_row, logits_row, cfg: MoEConfig, capacity: int):
+    """Route one sequence row. x_row: (L, D), logits_row: (L, E).
+
+    The dispatch buffers are allocated at ``n_experts_padded`` so the
+    expert dim shards evenly; phantom experts simply receive no tokens.
+    """
+    l, d = x_row.shape
+    e = cfg.n_experts_padded
+    probs = jax.nn.softmax(logits_row.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.top_k)  # (L, k) — real experts
+    top_p = top_p / jnp.maximum(
+        jnp.sum(top_p, axis=-1, keepdims=True), 1e-9
+    )  # renormalize over selected experts
+
+    s = l * cfg.top_k
+    flat_e = top_e.reshape(s)
+    flat_p = top_p.reshape(s)
+    flat_tok = jnp.repeat(jnp.arange(l, dtype=jnp.int32), cfg.top_k)
+    rank = _rank_within_expert(flat_e, cfg.n_experts)
+    keep = rank < capacity
+    # Dropped assignments scatter out of bounds (mode="drop").
+    slot_e = jnp.where(keep, flat_e, e)
+    slot_c = jnp.where(keep, rank, capacity)
+
+    # token index per (expert, capacity) slot; L marks an empty slot.
+    dispatch_idx = jnp.full((e, capacity), l, jnp.int32)
+    dispatch_idx = dispatch_idx.at[slot_e, slot_c].set(flat_tok, mode="drop")
+    combine_w = jnp.zeros((e, capacity), jnp.float32)
+    combine_w = combine_w.at[slot_e, slot_c].set(flat_p, mode="drop")
+
+    # Gather tokens; empty slots (idx == L) read out of bounds → clamp+zero.
+    x_pad = jnp.concatenate([x_row, jnp.zeros((1, d), x_row.dtype)], axis=0)
+    x_e = jnp.take(x_pad, dispatch_idx, axis=0)  # (E, C, D)
+
+    # Switch aux loss terms: fraction of tokens and mean prob per expert
+    # (real experts only).
+    frac_tokens = (
+        jnp.bincount(
+            flat_e, weights=keep.astype(jnp.float32), length=cfg.n_experts
+        )
+        / s
+    )
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = cfg.n_experts * jnp.sum(frac_tokens * mean_prob)
+    return x_e, dispatch_idx, combine_w, aux
+
+
+def apply_moe(params, x, cfg: MoEConfig, activation=jax.nn.silu):
+    """x: (B, L, D) → (B, L, D), plus scalar aux loss.
+
+    Routing, capacity and dispatch are per batch row, so with ``B`` sharded
+    over ``data`` and experts over ``model``, the gather/scatter never
+    crosses data shards.
+    """
+    b, l, d = x.shape
+    e = cfg.n_experts
+    capacity = max(1, int(l * cfg.top_k * cfg.capacity_factor / e))
+    logits = jnp.einsum(
+        "bld,de->ble", x.astype(jnp.float32), params["router"]
+    )
+
+    x_e, disp_idx, comb_w, aux = jax.vmap(
+        lambda xr, lr: _dispatch_one_row(xr, lr, cfg, capacity)
+    )(x, logits)
+    # x_e: (B, E, C, D); expert grouped SwiGLU
+    gate = activation(
+        jnp.einsum("becd,edf->becf", x_e, params["w_gate"])
+    )
+    up = jnp.einsum("becd,edf->becf", x_e, params["w_up"])
+    y_e = jnp.einsum("becf,efd->becd", gate * up, params["w_down"])
+    y_e = y_e * comb_w[..., None].astype(y_e.dtype)
+
+    # Scatter-add back to token positions (empty slots index L → dropped).
+    def combine_row(y_row, idx_row):
+        out = jnp.zeros((l, d), y_row.dtype)
+        return out.at[idx_row.reshape(-1)].add(
+            y_row.reshape(-1, d), mode="drop"
+        )
+
+    y = jax.vmap(combine_row)(y_e, disp_idx)
+    if cfg.n_shared_experts:
+        sp = params["shared"]
+        g = activation(x @ sp["w_gate"])
+        y = y + (g * (x @ sp["w_up"])) @ sp["w_down"]
+    return y.astype(x.dtype), cfg.aux_loss_weight * jnp.mean(aux)

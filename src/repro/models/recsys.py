@@ -1,0 +1,291 @@
+"""CTR / ranking recsys models: DCN-v2, DLRM, xDeepFM.
+
+Shared substrate: sparse categorical features → per-field embedding tables
+(10^6–10^8 rows, sharded row-wise over the ``model`` mesh axis) → an
+EmbeddingBag lookup (``jnp.take`` + reduce — JAX has no native
+EmbeddingBag, so it's built here per the taxonomy §RecSys guidance) → a
+feature-interaction op (cross / dot / CIN) → MLP → click logit.
+
+Models (assigned configs in src/repro/configs/):
+  * DCN-v2  [arXiv:2008.13535]: 3 full-rank cross layers ∥ deep MLP.
+  * DLRM    [arXiv:1906.00091]: bottom MLP, pairwise-dot interaction,
+            top MLP (RM2 sizing).
+  * xDeepFM [arXiv:1803.05170]: CIN (outer-product + field compression)
+            ∥ DNN ∥ linear.
+
+SCE is inapplicable to these binary-click models (C=2; no catalog-wide
+softmax) — DESIGN.md §5. ``retrieval_cand`` scoring runs the full model
+over candidate chunks (batched, not a Python loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, embed_init, init_mlp, mlp_apply
+
+
+# ---------------------------------------------------------------------------
+# Embedding substrate
+# ---------------------------------------------------------------------------
+def init_embedding_tables(
+    key, vocab_sizes: Sequence[int], embed_dim: int, dtype=jnp.float32
+) -> List[jax.Array]:
+    keys = jax.random.split(key, len(vocab_sizes))
+    return [
+        embed_init(k, (v, embed_dim), scale=1.0 / embed_dim**0.5, dtype=dtype)
+        for k, v in zip(keys, vocab_sizes)
+    ]
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, weights=None, mode="sum"):
+    """EmbeddingBag via gather + reduce. ids: (B, hot) → (B, D).
+
+    ``jnp.take`` + sum/mean is the JAX-native equivalent of
+    ``nn.EmbeddingBag`` (fixed-hotness bags; ragged bags are padded with a
+    zero-weight entry by the data pipeline).
+    """
+    emb = jnp.take(table, ids, axis=0)  # (B, hot, D)
+    if weights is not None:
+        emb = emb * weights[..., None]
+    if mode == "sum":
+        return jnp.sum(emb, axis=1)
+    if mode == "mean":
+        return jnp.mean(emb, axis=1)
+    raise ValueError(mode)
+
+
+def lookup_all_fields(
+    tables: List[jax.Array], sparse_ids: jax.Array, weights=None
+) -> jax.Array:
+    """sparse_ids: (B, n_fields, hot) → (B, n_fields, D)."""
+    outs = []
+    for f, table in enumerate(tables):
+        w = None if weights is None else weights[:, f]
+        outs.append(embedding_bag(table, sparse_ids[:, f], w))
+    return jnp.stack(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DCNv2Config:
+    n_dense: int = 13
+    vocab_sizes: Tuple[int, ...] = ()
+    embed_dim: int = 16
+    n_cross_layers: int = 3
+    mlp_sizes: Tuple[int, ...] = (1024, 1024, 512)
+    hot: int = 1
+    dtype: str = "float32"
+
+    @property
+    def d_input(self) -> int:
+        return self.n_dense + len(self.vocab_sizes) * self.embed_dim
+
+    def param_count(self) -> int:
+        d = self.d_input
+        cross = self.n_cross_layers * (d * d + d)
+        sizes = (d,) + self.mlp_sizes
+        deep = sum(a * b + b for a, b in zip(sizes[:-1], sizes[1:]))
+        emb = sum(self.vocab_sizes) * self.embed_dim
+        head = (d + self.mlp_sizes[-1]) + 1
+        return cross + deep + emb + head
+
+
+def init_dcn_v2(key, cfg: DCNv2Config):
+    dt = jnp.dtype(cfg.dtype)
+    k_emb, k_cross, k_mlp, k_head = jax.random.split(key, 4)
+    d = cfg.d_input
+    cross_keys = jax.random.split(k_cross, cfg.n_cross_layers)
+    return {
+        "tables": init_embedding_tables(k_emb, cfg.vocab_sizes, cfg.embed_dim, dt),
+        "cross_w": [
+            dense_init(k, (d, d), dtype=dt) for k in cross_keys
+        ],
+        "cross_b": [jnp.zeros((d,), dt) for _ in range(cfg.n_cross_layers)],
+        "deep": init_mlp(k_mlp, (d,) + cfg.mlp_sizes, dtype=dt),
+        "head_w": dense_init(k_head, (d + cfg.mlp_sizes[-1], 1), dtype=dt),
+        "head_b": jnp.zeros((1,), dt),
+    }
+
+
+def dcn_v2_forward(params, cfg: DCNv2Config, dense, sparse_ids):
+    """dense: (B, n_dense); sparse_ids: (B, n_fields, hot) → logits (B,)."""
+    emb = lookup_all_fields(params["tables"], sparse_ids)  # (B, F, D)
+    x0 = jnp.concatenate([dense, emb.reshape(emb.shape[0], -1)], axis=-1)
+    x = x0
+    for w, b in zip(params["cross_w"], params["cross_b"]):
+        x = x0 * (x @ w + b) + x  # DCN-v2 full-rank cross
+    deep = mlp_apply(params["deep"], x0)
+    out = jnp.concatenate([x, deep], axis=-1)
+    return (out @ params["head_w"] + params["head_b"])[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DLRM
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    n_dense: int = 13
+    vocab_sizes: Tuple[int, ...] = ()
+    embed_dim: int = 64
+    bot_mlp: Tuple[int, ...] = (512, 256, 64)
+    top_mlp: Tuple[int, ...] = (512, 512, 256, 1)
+    hot: int = 1
+    dtype: str = "float32"
+
+    def param_count(self) -> int:
+        nf = len(self.vocab_sizes) + 1
+        d_int = nf * (nf - 1) // 2 + self.embed_dim
+        bot = (self.n_dense,) + self.bot_mlp
+        top = (d_int,) + self.top_mlp
+        return (
+            sum(a * b + b for a, b in zip(bot[:-1], bot[1:]))
+            + sum(a * b + b for a, b in zip(top[:-1], top[1:]))
+            + sum(self.vocab_sizes) * self.embed_dim
+        )
+
+
+def init_dlrm(key, cfg: DLRMConfig):
+    dt = jnp.dtype(cfg.dtype)
+    k_emb, k_bot, k_top = jax.random.split(key, 3)
+    nf = len(cfg.vocab_sizes) + 1
+    d_int = nf * (nf - 1) // 2 + cfg.embed_dim
+    assert cfg.bot_mlp[-1] == cfg.embed_dim, "bottom MLP must end at embed_dim"
+    return {
+        "tables": init_embedding_tables(k_emb, cfg.vocab_sizes, cfg.embed_dim, dt),
+        "bot": init_mlp(k_bot, (cfg.n_dense,) + cfg.bot_mlp, dtype=dt),
+        "top": init_mlp(k_top, (d_int,) + cfg.top_mlp, dtype=dt),
+    }
+
+
+def dlrm_forward(params, cfg: DLRMConfig, dense, sparse_ids):
+    """Pairwise-dot interaction (upper triangle) + dense feature concat."""
+    b = dense.shape[0]
+    dense_out = mlp_apply(params["bot"], dense)  # (B, D)
+    emb = lookup_all_fields(params["tables"], sparse_ids)  # (B, F, D)
+    feats = jnp.concatenate([dense_out[:, None, :], emb], axis=1)  # (B, F+1, D)
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    nf = feats.shape[1]
+    iu, ju = jnp.triu_indices(nf, k=1)
+    pairs = inter[:, iu, ju]  # (B, F(F+1)/2 - F)
+    x = jnp.concatenate([pairs, dense_out], axis=-1)
+    return mlp_apply(params["top"], x)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# xDeepFM
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    vocab_sizes: Tuple[int, ...] = ()
+    embed_dim: int = 10
+    cin_layers: Tuple[int, ...] = (200, 200, 200)
+    mlp_sizes: Tuple[int, ...] = (400, 400)
+    hot: int = 1
+    dtype: str = "float32"
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.vocab_sizes)
+
+    def param_count(self) -> int:
+        m = self.n_fields
+        cin, h_prev = 0, m
+        for h in self.cin_layers:
+            cin += h * h_prev * m
+            h_prev = h
+        d_in = m * self.embed_dim
+        sizes = (d_in,) + self.mlp_sizes + (1,)
+        dnn = sum(a * b + b for a, b in zip(sizes[:-1], sizes[1:]))
+        emb = sum(self.vocab_sizes) * self.embed_dim
+        linear = sum(self.vocab_sizes)
+        return cin + dnn + emb + linear + sum(self.cin_layers)
+
+
+def init_xdeepfm(key, cfg: XDeepFMConfig):
+    dt = jnp.dtype(cfg.dtype)
+    k_emb, k_cin, k_mlp, k_lin, k_head = jax.random.split(key, 5)
+    m = cfg.n_fields
+    cin_w, h_prev = [], m
+    for i, h in enumerate(cfg.cin_layers):
+        cin_w.append(
+            dense_init(
+                jax.random.fold_in(k_cin, i), (h, h_prev, m), dtype=dt
+            )
+        )
+        h_prev = h
+    d_in = m * cfg.embed_dim
+    return {
+        "tables": init_embedding_tables(k_emb, cfg.vocab_sizes, cfg.embed_dim, dt),
+        "linear": [
+            embed_init(jax.random.fold_in(k_lin, i), (v, 1), dtype=dt)
+            for i, v in enumerate(cfg.vocab_sizes)
+        ],
+        "cin_w": cin_w,
+        "cin_head": dense_init(k_head, (sum(cfg.cin_layers), 1), dtype=dt),
+        "dnn": init_mlp(k_mlp, (d_in,) + cfg.mlp_sizes + (1,), dtype=dt),
+        "bias": jnp.zeros((1,), dt),
+    }
+
+
+def xdeepfm_forward(params, cfg: XDeepFMConfig, dense, sparse_ids):
+    """CIN ∥ DNN ∥ linear. ``dense`` is unused (Criteo numerics are
+    bucketized into the sparse fields per the paper's preprocessing)."""
+    x0 = lookup_all_fields(params["tables"], sparse_ids)  # (B, m, D)
+    xk = x0
+    pooled = []
+    for w in params["cin_w"]:
+        # z: (B, H_k, m, D) outer product of field maps, compressed by w.
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0)
+        xk = jnp.einsum("bhmd,nhm->bnd", z, w)
+        pooled.append(jnp.sum(xk, axis=-1))  # sum-pool over D → (B, H)
+    cin_out = jnp.concatenate(pooled, axis=-1) @ params["cin_head"]
+
+    dnn_out = mlp_apply(params["dnn"], x0.reshape(x0.shape[0], -1))
+
+    lin = sum(
+        embedding_bag(t, sparse_ids[:, f])
+        for f, t in enumerate(params["linear"])
+    )
+    return (cin_out + dnn_out + lin + params["bias"])[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Shared loss / serving helpers
+# ---------------------------------------------------------------------------
+def bce_logits_loss(logits, labels, valid=None):
+    """Binary cross-entropy on click logits."""
+    per = jnp.maximum(logits, 0) - logits * labels + jnp.log1p(
+        jnp.exp(-jnp.abs(logits))
+    )
+    if valid is not None:
+        w = valid.astype(per.dtype)
+        return jnp.sum(per * w) / jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.mean(per)
+
+
+def retrieval_scores(
+    forward_fn, params, cfg, dense_user, sparse_user, candidate_ids,
+    item_field: int = 0, chunk: int = 65536,
+):
+    """Score ``candidate_ids`` (N,) for one user by substituting the item
+    field and scoring candidates in batched chunks via ``lax.map``."""
+    n = candidate_ids.shape[0]
+    n_chunks = -(-n // chunk)
+    pad = n_chunks * chunk - n
+    cands = jnp.pad(candidate_ids, (0, pad)).reshape(n_chunks, chunk)
+
+    def score_chunk(c_ids):
+        b = c_ids.shape[0]
+        dense = jnp.broadcast_to(dense_user, (b,) + dense_user.shape[1:])
+        sparse = jnp.broadcast_to(sparse_user, (b,) + sparse_user.shape[1:])
+        sparse = sparse.at[:, item_field, 0].set(c_ids)
+        return forward_fn(params, cfg, dense, sparse)
+
+    scores = jax.lax.map(score_chunk, cands).reshape(-1)
+    return scores[:n]

@@ -1,0 +1,186 @@
+"""SASRec — the paper's backbone model (Kang & McAuley 2018, as adapted by
+the SCE paper §3.3/§4.1.3: trainable item + positional embeddings, causal
+self-attention blocks, LayerNorm, pointwise FFN; scoring by inner product
+of hidden states with the item-embedding table).
+
+The generic ``SeqRecConfig``/encoder here also powers BERT4Rec
+(bidirectional + mask token) — see repro/models/bert4rec.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    attention,
+    dense_init,
+    embed_init,
+    layer_norm,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqRecConfig:
+    n_items: int  # catalog size C (item ids 1..C-1; 0 = padding)
+    max_len: int
+    d_model: int
+    n_layers: int = 2
+    n_heads: int = 2
+    d_ff: int = 0  # 0 → 4*d_model
+    dropout: float = 0.2
+    causal: bool = True  # False for BERT4Rec
+    n_extra_tokens: int = 0  # e.g. 1 for BERT4Rec's [MASK]
+    dtype: str = "float32"
+    # Embedding rows padded so the vocab-parallel catalog shards evenly.
+    row_pad_multiple: int = 16
+
+    @property
+    def n_rows(self) -> int:
+        """Physical embedding rows: items + extra tokens, padded."""
+        m = self.row_pad_multiple
+        return -(-(self.n_items + self.n_extra_tokens) // m) * m
+
+    @property
+    def catalog_loss_size(self) -> int:
+        """Catalog slice used by the training losses: the smallest
+        shard-even size ≥ n_items. May include a few phantom rows (never
+        targets — standard vocab-padding semantics)."""
+        m = self.row_pad_multiple
+        c = -(-self.n_items // m) * m
+        return min(c, self.n_rows)
+
+    @property
+    def d_ff_actual(self) -> int:
+        return self.d_ff or 4 * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_count(self) -> int:
+        d, ff = self.d_model, self.d_ff_actual
+        per_layer = 4 * d * d + 2 * d * ff + 8 * d
+        emb = (self.n_items + self.n_extra_tokens) * d + self.max_len * d
+        return self.n_layers * per_layer + emb + 2 * d
+
+
+def init_params(key, cfg: SeqRecConfig):
+    dt = cfg.jnp_dtype
+    d, ff, L = cfg.d_model, cfg.d_ff_actual, cfg.n_layers
+    keys = jax.random.split(key, 4)
+
+    def stack(k, shape):
+        return jax.vmap(lambda kk: dense_init(kk, shape, dtype=dt))(
+            jax.random.split(k, L)
+        )
+
+    layers = {
+        "wqkv": stack(keys[0], (d, 3 * d)),
+        "wo": stack(keys[1], (d, d)),
+        "w1": stack(keys[2], (d, ff)),
+        "w2": stack(keys[3], (ff, d)),
+        "b1": jnp.zeros((L, ff), dt),
+        "b2": jnp.zeros((L, d), dt),
+        "ln1_g": jnp.ones((L, d), dt),
+        "ln1_b": jnp.zeros((L, d), dt),
+        "ln2_g": jnp.ones((L, d), dt),
+        "ln2_b": jnp.zeros((L, d), dt),
+    }
+    k_emb, k_pos = jax.random.split(keys[0])
+    return {
+        "item_emb": embed_init(k_emb, (cfg.n_rows, d), dtype=dt),
+        "pos_emb": embed_init(k_pos, (cfg.max_len, d), dtype=dt),
+        "ln_f_g": jnp.ones((d,), dt),
+        "ln_f_b": jnp.zeros((d,), dt),
+        "layers": layers,
+    }
+
+
+def _dropout(x, rate, key):
+    if key is None or rate <= 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+def forward(
+    params,
+    cfg: SeqRecConfig,
+    tokens,  # (B, L) int32 item ids; 0 = padding
+    *,
+    dropout_key: Optional[jax.Array] = None,
+):
+    """Returns hidden states (B, L, D). Padding positions attend nothing
+    useful but are excluded from the loss via the caller's valid mask."""
+    b, l = tokens.shape
+    x = jnp.take(params["item_emb"], tokens, axis=0)
+    x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    x = x + params["pos_emb"][None, :l]
+    keys = (
+        jax.random.split(dropout_key, cfg.n_layers * 2 + 1)
+        if dropout_key is not None
+        else [None] * (cfg.n_layers * 2 + 1)
+    )
+    x = _dropout(x, cfg.dropout, keys[0])
+
+    def body(x, inp):
+        lp, k_attn, k_ffn = inp
+        h = layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+        qkv = h @ lp["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, l, cfg.n_heads, cfg.head_dim)
+        k = k.reshape(b, l, cfg.n_heads, cfg.head_dim)
+        v = v.reshape(b, l, cfg.n_heads, cfg.head_dim)
+        o = attention(q, k, v, causal=cfg.causal, q_chunk=1024)
+        o = o.reshape(b, l, cfg.d_model) @ lp["wo"]
+        o = _dropout(o, cfg.dropout, k_attn)
+        x = x + o
+        h2 = layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+        f = jax.nn.gelu(h2 @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"]
+        f = _dropout(f, cfg.dropout, k_ffn)
+        return x + f, None
+
+    if dropout_key is not None:
+        attn_keys = jnp.stack(keys[1 : cfg.n_layers + 1])
+        ffn_keys = jnp.stack(keys[cfg.n_layers + 1 :])
+    else:
+        attn_keys = ffn_keys = jnp.zeros((cfg.n_layers, 2), jnp.uint32)
+        if dropout_key is None:
+            # scan needs concrete arrays; dropout disabled → keys unused
+            pass
+
+    def body_nodrop(x, lp):
+        return body(x, (lp, None, None))
+
+    if dropout_key is None:
+        x, _ = jax.lax.scan(body_nodrop, x, params["layers"])
+    else:
+        x, _ = jax.lax.scan(
+            body, x, (params["layers"], attn_keys, ffn_keys)
+        )
+    return layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+
+
+def item_embeddings(params, cfg: SeqRecConfig):
+    """Exact catalog table Y (C, D) — evaluation/scoring (unsharded use)."""
+    return params["item_emb"][: cfg.n_items]
+
+
+def loss_catalog(params, cfg: SeqRecConfig):
+    """Shard-even catalog slice for the training losses (may contain
+    phantom rows; they act as extra negatives, never as targets)."""
+    return params["item_emb"][: cfg.catalog_loss_size]
+
+
+def score_all(params, cfg: SeqRecConfig, hidden):
+    """Full-catalog scores — evaluation only (the training-time version of
+    this matmul is exactly what SCE avoids)."""
+    return hidden @ item_embeddings(params, cfg).T

@@ -1,0 +1,433 @@
+"""Decoder-only transformer LM (llama/gemma/MoE-style), pure JAX.
+
+Features required by the assigned architecture pool:
+  * GQA (n_kv_heads < n_heads), RoPE, SwiGLU, RMSNorm;
+  * gemma-2: alternating local(sliding-window)/global attention layers,
+    attention + final logit soft-capping, post-block norms, tied embeddings,
+    embedding scaling by sqrt(d_model);
+  * MoE FFN (kimi-k2, granite) via repro.models.moe;
+  * layer stack as ``jax.lax.scan`` over stacked params (keeps HLO size
+    O(1) in depth — essential for 62-layer AOT dry-runs) with optional
+    ``jax.checkpoint`` remat per scanned step;
+  * decode path with a dense KV cache (one-token step), window-aware.
+
+To keep the local/global pattern *static* (no double-computed attention),
+the scan iterates over layer GROUPS of ``len(attn_pattern)`` layers; within
+a group each layer's attention type is a Python constant.
+
+The LM head is *not* applied here — ``forward`` returns final hidden states
+and the (tied or separate) output embedding so the loss layer (full CE /
+chunked CE / SCE) can decide how to touch the vocabulary. That choice is the
+paper's entire subject.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_lib
+from repro.models.layers import (
+    apply_rope,
+    attention,
+    dense_init,
+    embed_init,
+    rms_norm,
+    swiglu,
+    init_swiglu,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    rope_theta: float = 10000.0
+    # attention pattern, tiled over layers: ("global",) or ("local","global")
+    attn_pattern: Tuple[str, ...] = ("global",)
+    window: Optional[int] = None
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    use_post_norm: bool = False  # gemma-2 style post-block norms
+    tie_embeddings: bool = True
+    scale_embeddings: bool = False  # gemma-style sqrt(d_model) scaling
+    moe: Optional[moe_lib.MoEConfig] = None
+    dtype: str = "float32"
+    remat: bool = True
+    q_chunk: int = 1024
+    # Embedding rows are padded so the vocab-parallel table shards evenly
+    # (standard practice — e.g. GPT-NeoX pads vocab to 128·TP). Padded
+    # rows are phantom ids: never targets, maskable at serve time.
+    vocab_pad_multiple: int = 16
+
+    def __post_init__(self):
+        assert self.n_layers % len(self.attn_pattern) == 0, (
+            "n_layers must be a multiple of the attention pattern length"
+        )
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def vocab_padded(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab // m) * m
+
+    @property
+    def n_heads_padded(self) -> int:
+        """Query heads padded so the head dim tiles a 16-way TP axis
+        (Megatron's heads-divisible-by-TP rule; 56→64, 24→32). Padding is
+        added per kv-group so the GQA head→kv mapping stays the uniform
+        ``h // g``. Phantom heads are ordinary (trainable) extra heads —
+        recorded as an assumption change in DESIGN.md §2."""
+        if self.n_heads < 16 or self.n_heads % 16 == 0:
+            return self.n_heads
+        g = self.n_heads // self.n_kv_heads
+        g_pad = g
+        while (self.n_kv_heads * g_pad) % 16 != 0:
+            g_pad += 1
+        return self.n_kv_heads * g_pad
+
+    @property
+    def group_size(self) -> int:
+        return len(self.attn_pattern)
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // self.group_size
+
+    def param_count(self) -> int:
+        d, dh = self.d_model, self.head_dim
+        hp = self.n_heads_padded
+        attn = d * (hp + 2 * self.n_kv_heads) * dh + hp * dh * d
+        if self.moe is not None:
+            ffn = self.moe.n_experts * 3 * d * self.moe.d_ff + d * self.moe.n_experts
+            ffn += self.moe.n_shared_experts * 3 * d * self.moe.d_ff
+        else:
+            ffn = 3 * d * self.d_ff
+        norms = (4 if self.use_post_norm else 2) * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn + norms) + emb + d
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        all_experts = self.n_layers * self.moe.n_experts * 3 * d * self.moe.d_ff
+        active = self.n_layers * (
+            (self.moe.top_k + self.moe.n_shared_experts) * 3 * d * self.moe.d_ff
+        )
+        return full - all_experts + active
+
+
+def init_params(key, cfg: TransformerConfig):
+    dt = cfg.jnp_dtype
+    d, dh, hq, hkv, ff, L = (
+        cfg.d_model, cfg.head_dim, cfg.n_heads_padded, cfg.n_kv_heads,
+        cfg.d_ff, cfg.n_layers,
+    )
+    keys = jax.random.split(key, 8)
+
+    def stack_init(k, shape, init=dense_init):
+        return jax.vmap(lambda kk: init(kk, shape, dtype=dt))(
+            jax.random.split(k, L)
+        )
+
+    layer = {
+        "wq": stack_init(keys[0], (d, hq * dh)),
+        "wk": stack_init(keys[1], (d, hkv * dh)),
+        "wv": stack_init(keys[2], (d, hkv * dh)),
+        "wo": stack_init(keys[3], (hq * dh, d)),
+        "norm_attn": jnp.zeros((L, d), dt),
+        "norm_mlp": jnp.zeros((L, d), dt),
+    }
+    if cfg.use_post_norm:
+        layer["norm_attn_post"] = jnp.zeros((L, d), dt)
+        layer["norm_mlp_post"] = jnp.zeros((L, d), dt)
+    if cfg.moe is not None:
+        layer["moe"] = jax.vmap(
+            lambda kk: moe_lib.init_moe(kk, d, cfg.moe, dtype=dt)
+        )(jax.random.split(keys[4], L))
+    else:
+        layer["mlp"] = jax.vmap(
+            lambda kk: init_swiglu(kk, d, ff, dtype=dt)
+        )(jax.random.split(keys[4], L))
+
+    params = {
+        "embed": embed_init(keys[5], (cfg.vocab_padded, d), dtype=dt),
+        "norm_final": jnp.zeros((d,), dt),
+        "layers": layer,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(
+            keys[6], (cfg.vocab_padded, d), dtype=dt
+        )
+    return params
+
+
+def output_embedding(params, cfg: TransformerConfig):
+    """Full (padded) output table — the training losses treat the padded
+    rows as phantom negatives (never targets; standard vocab padding)."""
+    return params["embed"] if cfg.tie_embeddings else params["unembed"]
+
+
+def _group_params(cfg: TransformerConfig, layers):
+    """Reshape stacked layer params (L, ...) → (n_groups, group, ...)."""
+    g = cfg.group_size
+    return jax.tree.map(
+        lambda a: a.reshape((cfg.n_groups, g) + a.shape[1:]), layers
+    )
+
+
+def _attn_block(cfg: TransformerConfig, x, lp, positions, layer_type: str):
+    b, l, _ = x.shape
+    h = rms_norm(x, lp["norm_attn"])
+    q = (h @ lp["wq"]).reshape(b, l, cfg.n_heads_padded, cfg.head_dim)
+    k = (h @ lp["wk"]).reshape(b, l, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ lp["wv"]).reshape(b, l, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    window = cfg.window if layer_type == "local" else None
+    out = attention(
+        q, k, v,
+        causal=True,
+        window=window,
+        softcap=cfg.attn_softcap,
+        q_chunk=cfg.q_chunk,
+    )
+    out = out.reshape(b, l, cfg.n_heads_padded * cfg.head_dim) @ lp["wo"]
+    if cfg.use_post_norm:
+        out = rms_norm(out, lp["norm_attn_post"])
+    return out
+
+
+def _mlp_block(cfg: TransformerConfig, x, lp):
+    h = rms_norm(x, lp["norm_mlp"])
+    if cfg.moe is not None:
+        out, aux = moe_lib.apply_moe(lp["moe"], h, cfg.moe)
+    else:
+        out, aux = swiglu(lp["mlp"], h), jnp.zeros((), jnp.float32)
+    if cfg.use_post_norm:
+        out = rms_norm(out, lp["norm_mlp_post"])
+    return out, aux
+
+
+def forward(params, cfg: TransformerConfig, tokens, positions=None):
+    """tokens: (B, L) int32 → (hidden (B, L, D), aux_loss scalar)."""
+    b, l = tokens.shape
+    if positions is None:
+        positions = jnp.arange(l)[None, :]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    grouped = _group_params(cfg, params["layers"])
+
+    def body(x, group_lp):
+        aux_total = jnp.zeros((), jnp.float32)
+        for gi, layer_type in enumerate(cfg.attn_pattern):
+            lp = jax.tree.map(lambda a: a[gi], group_lp)
+            x = x + _attn_block(cfg, x, lp, positions, layer_type)
+            mlp_out, aux = _mlp_block(cfg, x, lp)
+            x = x + mlp_out
+            aux_total = aux_total + aux
+        return x, aux_total
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, auxes = jax.lax.scan(body, x, grouped)
+    x = rms_norm(x, params["norm_final"])
+    return x, jnp.sum(auxes)
+
+
+def logits_from_hidden(params, cfg: TransformerConfig, hidden):
+    """Full logits (use only for small vocab / decode single position).
+    Phantom (padding) vocab rows are masked to -inf for sampling safety."""
+    logits = hidden @ output_embedding(params, cfg).T
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    if cfg.vocab_padded != cfg.vocab:
+        ids = jnp.arange(cfg.vocab_padded)
+        logits = jnp.where(ids < cfg.vocab, logits, -1e30)
+    return logits
+
+
+def prefill(params, cfg: TransformerConfig, tokens, *,
+            cache_len: Optional[int] = None, act_spec=None):
+    """Process a full prompt and return ``(hidden, cache)``.
+
+    The cache follows the ``init_cache`` layout: global layers keep all
+    ``cache_len`` (default: prompt length) positions; local layers keep a
+    rolling ``window``-sized cache holding the last ``window`` positions
+    at slots ``p mod window`` — exactly what ``decode_step`` expects when
+    continuing from ``pos = prompt_len``.
+
+    ``act_spec`` (a PartitionSpec) pins the residual stream's sharding at
+    every layer boundary — pass ``P(dp, "model", None)`` for sequence
+    parallelism so per-layer K/V are born in the seq-sharded cache layout.
+    """
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    positions = jnp.arange(s)[None, :]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+
+    def constrain(t):
+        if act_spec is None:
+            return t
+        return jax.lax.with_sharding_constraint(t, act_spec)
+
+    x = constrain(x)
+    grouped = _group_params(cfg, params["layers"])
+
+    def _to_cache(k_or_v, layer_type: str):
+        """(B, S, Hkv, dh) → cache slice for one layer."""
+        if layer_type == "local" and cfg.window is not None:
+            w = min(cfg.window, cache_len)
+            if s >= w:
+                # last w positions, placed at slots p mod w
+                rel = (jnp.arange(w) - s) % w
+                out = jax.lax.dynamic_slice_in_dim(k_or_v, s - w, w, axis=1)
+                out = jnp.take(out, rel, axis=1)
+            else:
+                out = jnp.pad(k_or_v, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+            return out
+        if s >= cache_len:
+            return k_or_v[:, :cache_len]
+        return jnp.pad(
+            k_or_v, ((0, 0), (0, cache_len - s), (0, 0), (0, 0))
+        )
+
+    def body(x, group_lp):
+        kvs = {}
+        for gi, layer_type in enumerate(cfg.attn_pattern):
+            lp = jax.tree.map(lambda a: a[gi], group_lp)
+            h = rms_norm(x, lp["norm_attn"])
+            q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads_padded, cfg.head_dim)
+            k = (h @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+            v = (h @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            window = cfg.window if layer_type == "local" else None
+            out = attention(
+                q, k, v,
+                causal=True,
+                window=window,
+                softcap=cfg.attn_softcap,
+                q_chunk=cfg.q_chunk,
+            )
+            out = out.reshape(b, s, -1) @ lp["wo"]
+            if cfg.use_post_norm:
+                out = rms_norm(out, lp["norm_attn_post"])
+            x = x + out
+            mlp_out, _ = _mlp_block(cfg, x, lp)
+            x = constrain(x + mlp_out)
+            kvs[f"k{gi}"] = _to_cache(k, layer_type)
+            kvs[f"v{gi}"] = _to_cache(v, layer_type)
+        return x, kvs
+
+    x, cache = jax.lax.scan(body, x, grouped)
+    x = rms_norm(x, params["norm_final"])
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode path (single-token step over a dense KV cache)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int, dtype=None):
+    """Dense KV cache. Local (sliding-window) layers allocate only a
+    ``window``-sized rolling cache — for gemma2 @ 500k context this is a
+    128× cache reduction on half the layers."""
+    dtype = dtype or cfg.jnp_dtype
+    g = cfg.group_size
+    caches = {}
+    for gi, layer_type in enumerate(cfg.attn_pattern):
+        length = (
+            min(cfg.window, max_len)
+            if (layer_type == "local" and cfg.window is not None)
+            else max_len
+        )
+        shape = (cfg.n_groups, batch, length, cfg.n_kv_heads, cfg.head_dim)
+        caches[f"k{gi}"] = jnp.zeros(shape, dtype)
+        caches[f"v{gi}"] = jnp.zeros(shape, dtype)
+    return caches
+
+
+def decode_step(params, cfg: TransformerConfig, cache, tokens, pos):
+    """One decode step. tokens: (B, 1); pos: scalar current position.
+
+    Returns (logits (B, 1, V), new_cache). Global layers mask cache entries
+    at positions > pos; local layers use a rolling (mod-window) cache.
+    """
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    positions = jnp.full((b, 1), pos)
+    grouped = _group_params(cfg, params["layers"])
+
+    def body(x, inp):
+        group_lp = inp[0]
+        new_caches = {}
+        for gi, layer_type in enumerate(cfg.attn_pattern):
+            lp = jax.tree.map(lambda a: a[gi], group_lp)
+            k_cache = inp[1][f"k{gi}"]
+            v_cache = inp[1][f"v{gi}"]
+            cache_len = k_cache.shape[1]
+            is_local = layer_type == "local" and cfg.window is not None
+            slot = jnp.mod(pos, cache_len) if is_local else pos
+
+            h = rms_norm(x, lp["norm_attn"])
+            q = (h @ lp["wq"]).reshape(b, 1, cfg.n_heads_padded, cfg.head_dim)
+            k_new = (h @ lp["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+            v_new = (h @ lp["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k_new = apply_rope(k_new, positions, cfg.rope_theta)
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0)
+            )
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0)
+            )
+            kv_idx = jnp.arange(cache_len)
+            if is_local:
+                # rolling cache: entry at index i holds some position ≡ i
+                # (mod window) that is ≤ pos and > pos - window by
+                # construction — every filled slot is valid once pos ≥
+                # window; before that, mask unfilled slots.
+                valid = (kv_idx[None, :] <= pos) | jnp.full(
+                    (1, cache_len), pos >= cache_len
+                )
+            else:
+                valid = kv_idx[None, :] <= pos
+            valid = jnp.broadcast_to(valid, (b, cache_len))
+            attn_out = attention(
+                q, k_cache, v_cache,
+                causal=False,  # masking handled via kv_valid
+                softcap=cfg.attn_softcap,
+                kv_valid=valid,
+            )
+            attn_out = attn_out.reshape(b, 1, -1) @ lp["wo"]
+            if cfg.use_post_norm:
+                attn_out = rms_norm(attn_out, lp["norm_attn_post"])
+            x = x + attn_out
+            mlp_out, _ = _mlp_block(cfg, x, lp)
+            x = x + mlp_out
+            new_caches[f"k{gi}"] = k_cache
+            new_caches[f"v{gi}"] = v_cache
+        return x, new_caches
+
+    x, new_cache = jax.lax.scan(body, x, (grouped, cache))
+    x = rms_norm(x, params["norm_final"])
+    logits = logits_from_hidden(params, cfg, x)
+    return logits, new_cache

@@ -1,0 +1,38 @@
+"""Optimizers and schedules (no optax dependency — built for this repo)."""
+from repro.optim.optimizers import (
+    OptState,
+    adamw,
+    adafactor,
+    sgd_momentum,
+    make_optimizer,
+    clip_by_global_norm,
+    cosine_schedule,
+    linear_warmup_cosine,
+    global_norm,
+)
+from repro.optim.compression import (
+    compress_int8,
+    decompress_int8,
+    ErrorFeedbackState,
+    init_error_feedback,
+    compressed_gradient_transform,
+    with_error_feedback_compression,
+)
+
+__all__ = [
+    "OptState",
+    "adamw",
+    "adafactor",
+    "sgd_momentum",
+    "make_optimizer",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+    "global_norm",
+    "compress_int8",
+    "decompress_int8",
+    "ErrorFeedbackState",
+    "init_error_feedback",
+    "compressed_gradient_transform",
+    "with_error_feedback_compression",
+]

@@ -1,0 +1,227 @@
+"""Optimizers as pure (init, update) function pairs over pytrees.
+
+``update(grads, state, params) -> (new_params, new_state)``; the step
+counter lives in the state. AdamW keeps fp32 master moments regardless of
+param dtype; Adafactor keeps factored second moments (row/col statistics)
+— the only optimizer whose state fits a 1T-parameter MoE on 512 chips
+(see DESIGN.md §4, kimi-k2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: dict  # optimizer-specific pytrees
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+
+    return fn
+
+
+def linear_warmup_cosine(
+    base_lr: float, warmup_steps: int, total_steps: int, min_frac: float = 0.1
+):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup_steps, 1), min_frac)
+
+    def fn(step):
+        warm = base_lr * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn
+
+
+def _as_schedule(lr) -> Callable:
+    return lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    clip_norm: Optional[float] = None,
+):
+    sched = _as_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            inner={
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+            },
+        )
+
+    def update(grads, state: OptState, params):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr_t = sched(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+        flat = jax.tree.map(
+            upd, params, grads, state.inner["m"], state.inner["v"],
+            is_leaf=lambda x: isinstance(x, jax.Array),
+        )
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step=step, inner={"m": new_m, "v": new_v})
+
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, no first moment by default)
+# ---------------------------------------------------------------------------
+def adafactor(
+    lr,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+    min_dim_size_to_factor: int = 128,
+):
+    """Shazeer & Stern (2018). Second-moment state for a (n, m) matrix is
+    (n,) + (m,) instead of (n, m) — ~10^5× smaller for big embeddings."""
+    sched = _as_schedule(lr)
+
+    def _factored(shape):
+        return (
+            len(shape) >= 2
+            and shape[-1] >= min_dim_size_to_factor
+            and shape[-2] >= min_dim_size_to_factor
+        )
+
+    def init(params):
+        def leaf_state(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            inner={"v": jax.tree.map(leaf_state, params)},
+        )
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = sched(step)
+        beta = 1.0 - (step.astype(jnp.float32)) ** (-decay)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                v_est = (
+                    vr[..., None] * vc[..., None, :] / denom[..., None]
+                )
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v_est = beta * s["v"] + (1 - beta) * g2
+                new_s = {"v": v_est}
+            u = g / jnp.sqrt(v_est + eps)
+            # update clipping (RMS of update ≤ clip_threshold)
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            delta = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), new_s
+
+        flat = jax.tree.map(
+            upd, params, grads, state.inner["v"],
+            is_leaf=lambda x: isinstance(x, jax.Array),
+        )
+        is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[1], dict)
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=is_pair)
+        new_v = jax.tree.map(lambda t: t[1], flat, is_leaf=is_pair)
+        return new_params, OptState(step=step, inner={"v": new_v})
+
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum (used by property tests as a golden reference)
+# ---------------------------------------------------------------------------
+def sgd_momentum(lr, momentum: float = 0.9):
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            inner={"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)},
+        )
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = sched(step)
+
+        def upd(p, g, m):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), m
+
+        flat = jax.tree.map(
+            upd, params, grads, state.inner["m"],
+            is_leaf=lambda x: isinstance(x, jax.Array),
+        )
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step=step, inner={"m": new_m})
+
+    return init, update
+
+
+def make_optimizer(name: str, lr, **kwargs):
+    if name == "adamw":
+        return adamw(lr, **kwargs)
+    if name == "adafactor":
+        return adafactor(lr, **kwargs)
+    if name == "sgd":
+        return sgd_momentum(lr, **kwargs)
+    raise KeyError(name)

@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no global XLA_FLAGS here — smoke tests and
+benches must see the real single CPU device; multi-device tests spawn
+subprocesses (tests/test_distributed.py) with their own flags."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _np_seed():
+    np.random.seed(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

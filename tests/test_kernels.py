@@ -1,0 +1,163 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, fwd + grad,
+interpret=True on CPU (kernel-taxonomy testing protocol)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+# (n_b, b_x, b_y, d) — includes non-divisible tails vs the default blocks
+SCE_SHAPES = [
+    (1, 8, 16, 8),
+    (4, 16, 32, 16),
+    (2, 128, 256, 64),
+    (3, 100, 200, 32),  # non-divisible everything
+    (2, 130, 300, 24),
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _sce_problem(key, n_b, b_x, b_y, d, dtype):
+    ks = jax.random.split(key, 5)
+    x_b = jax.random.normal(ks[0], (n_b, b_x, d), dtype)
+    y_b = jax.random.normal(ks[1], (n_b, b_y, d), dtype)
+    tgt = jax.random.randint(ks[2], (n_b, b_x), 0, 1000)
+    # make some real collisions
+    cand = jax.random.randint(ks[3], (n_b, b_y), 0, 1000)
+    cand = cand.at[:, 0].set(tgt[:, 0])
+    pos = jax.random.normal(ks[4], (n_b, b_x), dtype)
+    return x_b, y_b, tgt, cand, pos
+
+
+@pytest.mark.parametrize("shape", SCE_SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sce_bucket_forward(key, shape, dtype):
+    args = _sce_problem(key, *shape, dtype)
+    got = ops.sce_bucket_loss(*args, interpret=True)
+    want = ref.sce_bucket_loss_ref(*args)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("shape", SCE_SHAPES[:3])
+def test_sce_bucket_grads(key, shape):
+    x_b, y_b, tgt, cand, pos = _sce_problem(key, *shape, jnp.float32)
+
+    def f_kernel(x_b, y_b, pos):
+        return jnp.sum(
+            ops.sce_bucket_loss(x_b, y_b, tgt, cand, pos, interpret=True)
+        )
+
+    def f_ref(x_b, y_b, pos):
+        return jnp.sum(ref.sce_bucket_loss_ref(x_b, y_b, tgt, cand, pos))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x_b, y_b, pos)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x_b, y_b, pos)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,c,d", [(16, 64, 8), (100, 300, 16),
+                                   (256, 1000, 32), (33, 517, 24)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_ce_forward(key, n, c, d, dtype):
+    kx, ky, kt = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (n, d), dtype)
+    y = jax.random.normal(ky, (c, d), dtype)
+    t = jax.random.randint(kt, (n,), 0, c)
+    got = ops.fused_ce_loss(x, y, t, interpret=True)
+    want = ref.fused_ce_loss_ref(x, y, t)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_fused_ce_grads(key):
+    n, c, d = 32, 200, 16
+    kx, ky, kt = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (n, d))
+    y = jax.random.normal(ky, (c, d))
+    t = jax.random.randint(kt, (n,), 0, c)
+
+    gk = jax.grad(
+        lambda x, y: jnp.sum(ops.fused_ce_loss(x, y, t, interpret=True)),
+        argnums=(0, 1),
+    )(x, y)
+    gr = jax.grad(
+        lambda x, y: jnp.sum(ref.fused_ce_loss_ref(x, y, t)), argnums=(0, 1)
+    )(x, y)
+    np.testing.assert_allclose(gk[0], gr[0], rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(gk[1], gr[1], rtol=2e-4, atol=1e-5)
+
+
+def test_fused_lse_streaming_invariance(key):
+    """Block size must not change the result (online-logsumexp exactness)."""
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (40, 16))
+    y = jax.random.normal(ky, (333, 16))
+    a = ops.fused_lse(x, y, block_n=8, block_c=32, interpret=True)
+    b = ops.fused_lse(x, y, block_n=40, block_c=512, interpret=True)
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+def test_kernel_under_jit(key):
+    """pallas_call must compose with jit (the ops are used inside jitted
+    train steps)."""
+    args = _sce_problem(key, 2, 16, 32, 8, jnp.float32)
+    f = jax.jit(lambda *a: ops.sce_bucket_loss(*a, interpret=True))
+    got = f(*args)
+    want = ref.sce_bucket_loss_ref(*args)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SCE_SHAPES[:4])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sce_bucket_plse_forward(key, shape, dtype):
+    x_b, y_b, tgt, cand, _ = _sce_problem(key, *shape, dtype)
+    got = ops.sce_bucket_plse(x_b, y_b, tgt, cand, interpret=True)
+    want = ref.sce_bucket_plse_ref(x_b, y_b, tgt, cand)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_sce_bucket_plse_grads(key):
+    x_b, y_b, tgt, cand, _ = _sce_problem(key, 3, 32, 48, 16, jnp.float32)
+
+    def f_kernel(x_b, y_b):
+        return jnp.sum(
+            ops.sce_bucket_plse(x_b, y_b, tgt, cand, interpret=True)
+        )
+
+    def f_ref(x_b, y_b):
+        return jnp.sum(ref.sce_bucket_plse_ref(x_b, y_b, tgt, cand))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1))(x_b, y_b)
+    gr = jax.grad(f_ref, argnums=(0, 1))(x_b, y_b)
+    np.testing.assert_allclose(gk[0], gr[0], rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(gk[1], gr[1], rtol=2e-4, atol=1e-5)
+
+
+def test_union_mode_partials_compose_to_full_lse(key):
+    """Merging per-slice partial LSEs reproduces the full logsumexp —
+    the union-mode cross-shard merge identity."""
+    x_b, y_b, tgt, cand, _ = _sce_problem(key, 2, 16, 64, 8, jnp.float32)
+    full = ref.sce_bucket_plse_ref(x_b, y_b, tgt, cand)
+    parts = []
+    for j in range(4):  # 4 "shards" of 16 candidates
+        sl = slice(j * 16, (j + 1) * 16)
+        parts.append(
+            ref.sce_bucket_plse_ref(x_b, y_b[:, sl], tgt, cand[:, sl])
+        )
+    stacked = jnp.stack(parts)
+    m = jnp.max(stacked, axis=0)
+    merged = m + jnp.log(jnp.sum(jnp.exp(stacked - m), axis=0))
+    np.testing.assert_allclose(merged, full, rtol=1e-5)

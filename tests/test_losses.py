@@ -1,0 +1,219 @@
+"""Baseline losses (paper §2.2): CE variants agree; sampled losses sane."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.losses import (
+    bce,
+    bce_plus,
+    ce,
+    ce_chunked,
+    ce_fused,
+    ce_minus,
+    gbce,
+    loss_peak_elements,
+    make_loss,
+)
+
+
+def _problem(key, n=48, c=300, d=12):
+    kx, ky, kt = jax.random.split(key, 3)
+    return (
+        jax.random.normal(kx, (n, d)),
+        jax.random.normal(ky, (c, d)),
+        jax.random.randint(kt, (n,), 0, c),
+    )
+
+
+def test_ce_chunked_matches_ce(key):
+    x, y, t = _problem(key)
+    a, _ = ce(x, y, t)
+    b, _ = ce_chunked(x, y, t, chunk_size=64)  # non-divisible tail: 300/64
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+def test_ce_fused_matches_ce(key):
+    x, y, t = _problem(key)
+    a, _ = ce(x, y, t)
+    b, _ = ce_fused(x, y, t)
+    np.testing.assert_allclose(a, b, rtol=1e-4)
+
+
+def test_ce_chunked_gradient_matches(key):
+    x, y, t = _problem(key, n=16, c=100)
+    ga = jax.grad(lambda x, y: ce(x, y, t)[0], argnums=(0, 1))(x, y)
+    gb = jax.grad(
+        lambda x, y: ce_chunked(x, y, t, chunk_size=32)[0], argnums=(0, 1)
+    )(x, y)
+    np.testing.assert_allclose(ga[0], gb[0], rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(ga[1], gb[1], rtol=1e-4, atol=1e-6)
+
+
+def test_valid_mask_mean(key):
+    x, y, t = _problem(key)
+    vm = jnp.arange(48) < 10
+    a, _ = ce(x, y, t, valid_mask=vm)
+    b, _ = ce(x[:10], y, t[:10])
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_bce_plus_reduces_to_bce(key):
+    x, y, t = _problem(key)
+    a, _ = bce(x, y, t, key=key)
+    b, _ = bce_plus(x, y, t, key=key, num_negatives=1)
+    np.testing.assert_allclose(a, b)
+
+
+def test_gbce_calibration_beta(key):
+    """gBCE with t=0 ⇒ beta = alpha·(1/alpha) = 1 ⇒ equals BCE+
+    (Petrov & Macdonald: t interpolates beta from 1 to alpha)."""
+    x, y, t = _problem(key)
+    a, _ = gbce(x, y, t, key=key, num_negatives=4, t=0.0)
+    b, _ = bce_plus(x, y, t, key=key, num_negatives=4)
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+    _, aux = gbce(x, y, t, key=key, num_negatives=4, t=0.5)
+    alpha = 4 / (300 - 1)
+    want_beta = alpha * (0.5 * (1 - 1 / alpha) + 1 / alpha)
+    np.testing.assert_allclose(float(aux["beta"]), want_beta, rtol=1e-6)
+    # at t=1 the positive term is fully down-weighted to beta=alpha
+    _, aux1 = gbce(x, y, t, key=key, num_negatives=4, t=1.0)
+    np.testing.assert_allclose(float(aux1["beta"]), alpha, rtol=1e-6)
+
+
+def test_ce_minus_oversampling_shift(key):
+    """CE⁻ samples negatives WITH replacement: at k ≫ C each item appears
+    ≈ k/C times, so the denominator is ≈ (k/C)·(full sum) and the loss
+    sits ≈ log(k/C) above full CE — a quantitative sanity check of the
+    sampled-CE estimator."""
+    x, y, t = _problem(key, n=16, c=50)
+    full, _ = ce(x, y, t)
+    k = 2000
+    approx, _ = ce_minus(x, y, t, key=key, num_negatives=k)
+    shift = float(approx) - float(full)
+    assert abs(shift - np.log(k / 50)) < 0.5, shift
+
+
+def test_ce_minus_lower_bounds_ce_without_replacement_effect(key):
+    """With few negatives (k ≪ C, duplicates unlikely) the partial
+    denominator keeps CE⁻ ≤ CE."""
+    x, y, t = _problem(key, n=32, c=5000)
+    full, _ = ce(x, y, t)
+    approx, _ = ce_minus(x, y, t, key=key, num_negatives=16)
+    assert float(approx) <= float(full) + 1e-3
+
+
+def test_registry_all_losses_run(key):
+    x, y, t = _problem(key)
+    for name, kwargs in [
+        ("ce", {}),
+        ("ce_chunked", {}),
+        ("ce_fused", {}),
+        ("bce", {}),
+        ("bce_plus", {"num_negatives": 8}),
+        ("gbce", {"num_negatives": 8, "t": 0.75}),
+        ("ce_minus", {"num_negatives": 8}),
+    ]:
+        fn = make_loss(name, **kwargs)
+        loss, _ = fn(x, y, t, key=key)
+        assert np.isfinite(float(loss)), name
+
+
+def test_unknown_loss_raises():
+    with pytest.raises(KeyError):
+        make_loss("nope")
+
+
+def test_peak_elements_ordering():
+    """Analytic memory model: SCE ≪ CE at large catalogs (paper Fig. 5)."""
+    n, c, d = 128 * 200, 10**6, 64
+    from repro.core.sce import SCEConfig
+
+    cfg = SCEConfig.from_alpha_beta(n, c, bucket_size_y=256)
+    assert loss_peak_elements("sce", n, c, d, cfg=cfg) < loss_peak_elements(
+        "ce", n, c, d
+    )
+    assert loss_peak_elements(
+        "bce_plus", n, c, d, num_negatives=256
+    ) < loss_peak_elements("ce", n, c, d)
+
+
+def test_ce_inbatch_masks_collisions(key):
+    """A duplicated target must not appear as its twin's negative."""
+    import jax.numpy as jnp
+
+    x = jax.random.normal(key, (4, 8))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (50, 8))
+    t = jnp.array([3, 3, 7, 9])  # positions 0,1 share a target
+    from repro.core.losses import ce_inbatch
+
+    loss, _ = ce_inbatch(x, y, t)
+    assert np.isfinite(float(loss))
+    # gradient wrt y[3] through position 0's NEGATIVE slot is masked:
+    # compare against a no-duplicate batch — finite either way
+    g = jax.grad(lambda y: ce_inbatch(x, y, t)[0])(y)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_ce_inbatch_is_sampled_ce_over_batch_targets(key):
+    """With all-distinct targets, in-batch CE == CE⁻ restricted to the
+    batch's target set."""
+    import jax.numpy as jnp
+
+    x = jax.random.normal(key, (6, 8))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (50, 8))
+    t = jnp.array([1, 5, 9, 13, 17, 21])
+    from repro.core.losses import ce_inbatch
+
+    got, _ = ce_inbatch(x, y, t)
+    # manual: denominator over the batch's target embeddings
+    emb = y[t]
+    logits = x @ emb.T
+    want = jnp.mean(
+        jax.nn.logsumexp(logits, axis=-1) - jnp.diagonal(logits)
+    )
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-6)
+
+
+def test_ce_pop_prefers_popular_negatives(key):
+    """Popularity-proportional sampling draws hot items far more often."""
+    import jax.numpy as jnp
+
+    from repro.core.losses import ce_pop
+
+    x = jax.random.normal(key, (64, 8))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (100, 8))
+    t = jnp.zeros((64,), jnp.int32)
+    pop = jnp.ones((100,)).at[7].set(1000.0)  # item 7 is 1000× hotter
+    # run the internal sampler via the loss (finite + deterministic)
+    loss, _ = ce_pop(x, y, t, key=key, num_negatives=32, popularity=pop)
+    assert np.isfinite(float(loss))
+    # direct check on the categorical draw
+    logp = jnp.log(pop)
+    draws = jax.random.categorical(key, logp[None, :], shape=(64, 32))
+    frac7 = float((draws == 7).mean())
+    assert frac7 > 0.5  # ≫ 1/100
+
+
+def test_rece_single_chunk_equals_ce(key):
+    """With n_chunks=1 every chunk spans everything ⇒ RECE == full CE
+    (the chunk holds the whole catalog; positive double-count is masked)."""
+    from repro.core.losses import rece
+
+    x, y, t = _problem(key, n=32, c=100)
+    got, _ = rece(x, y, t, key=key, n_chunks=1)
+    want, _ = ce(x, y, t)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_rece_partitions_every_position(key):
+    """Each position lands in exactly one chunk (partition semantics —
+    the key structural difference from SCE's overlapping buckets)."""
+    from repro.core.losses import rece
+
+    x, y, t = _problem(key, n=64, c=256)
+    loss, _ = rece(x, y, t, key=key, n_chunks=8)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda x: rece(x, y, t, key=key, n_chunks=8)[0])(x)
+    touched = np.abs(np.asarray(g)).sum(axis=-1) > 0
+    assert touched.all()  # partition covers every position

@@ -1,0 +1,204 @@
+"""Core SCE behaviour: exactness limit, bound/mask properties (paper
+Algorithm 1 semantics), Mix diagnostics, softcap."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.losses import ce, make_loss
+from repro.core.sce import (
+    SCEConfig,
+    aggregate_bucket_losses,
+    make_bucket_centers,
+    sce_loss,
+    select_buckets,
+)
+
+
+def _problem(key, n=64, c=100, d=16, scale=1.0):
+    kx, ky, kt = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (n, d)) * scale
+    y = jax.random.normal(ky, (c, d)) * scale
+    t = jax.random.randint(kt, (n,), 0, c)
+    return x, y, t
+
+
+def test_exactness_limit_equals_full_ce(key):
+    """n_b=1, b_x=N, b_y=C ⇒ SCE == CE (golden identity, DESIGN.md §7)."""
+    x, y, t = _problem(key)
+    cfg = SCEConfig(n_buckets=1, bucket_size_x=64, bucket_size_y=100,
+                    use_mix=False)
+    got = sce_loss(x, y, t, key=key, cfg=cfg)
+    want, _ = ce(x, y, t)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_exactness_limit_with_mix(key):
+    x, y, t = _problem(key)
+    cfg = SCEConfig(1, 64, 100, use_mix=True)
+    got = sce_loss(x, y, t, key=key, cfg=cfg)
+    want, _ = ce(x, y, t)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_exactness_with_kernel_path(key):
+    x, y, t = _problem(key)
+    cfg = SCEConfig(1, 64, 100, use_mix=False, use_kernel=True)
+    got = sce_loss(x, y, t, key=key, cfg=cfg)
+    want, _ = ce(x, y, t)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    n_b=st.integers(1, 8),
+    b_y=st.integers(4, 64),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_sce_lower_bounds_full_ce(seed, n_b, b_y):
+    """Per-position SCE loss uses a PARTIAL denominator ⇒ global SCE mean
+    over covered positions ≤ max per-position CE (and each covered
+    position's SCE ≤ its CE). Property from DESIGN.md §7."""
+    key = jax.random.PRNGKey(seed)
+    x, y, t = _problem(key, n=32, c=64, d=8)
+    cfg = SCEConfig(n_buckets=n_b, bucket_size_x=16,
+                    bucket_size_y=min(b_y, 64), use_mix=False)
+    b = make_bucket_centers(key, x, cfg.n_buckets, use_mix=False)
+    idx_x, idx_y = select_buckets(b, x, y, cfg)
+    from repro.core.sce import _in_bucket_losses_jnp
+
+    x_b = jnp.take(x, idx_x, axis=0)
+    y_b = jnp.take(y, idx_y, axis=0)
+    tgt_b = jnp.take(t, idx_x, axis=0)
+    pos = jnp.einsum("nxd,nxd->nx", x_b, jnp.take(y, tgt_b, axis=0))
+    losses = _in_bucket_losses_jnp(x_b, y_b, tgt_b, idx_y, pos)
+
+    # full-CE per position
+    logits = x @ y.T
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    full = lse - jnp.take_along_axis(logits, t[:, None], axis=1)[:, 0]
+    full_b = jnp.take(full, idx_x, axis=0)
+    assert np.all(np.asarray(losses) <= np.asarray(full_b) + 1e-4)
+
+
+@hypothesis.given(b_y_small=st.integers(2, 16), seed=st.integers(0, 1000))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_bound_tightens_with_larger_by(b_y_small, seed):
+    """max-aggregated per-bucket loss is monotone in b_y: more candidates
+    ⇒ larger partial denominator ⇒ larger (closer to CE) loss."""
+    key = jax.random.PRNGKey(seed)
+    x, y, t = _problem(key, n=32, c=64, d=8)
+
+    def mean_loss(b_y):
+        cfg = SCEConfig(4, 16, b_y, use_mix=False)
+        return float(sce_loss(x, y, t, key=key, cfg=cfg))
+
+    small = mean_loss(b_y_small)
+    big = mean_loss(64)  # candidate set ⊇ the small one (same buckets)
+    assert big >= small - 1e-4
+
+
+def test_positive_collision_mask_blocks_gradient(key):
+    """Gradient wrt a candidate slot that IS the positive must be zero
+    through the negative path (paper: 'filled with -inf')."""
+    d = 8
+    x_b = jax.random.normal(key, (1, 2, d))
+    y_b = jax.random.normal(jax.random.fold_in(key, 1), (1, 3, d))
+    tgt_b = jnp.array([[5, 7]])
+    cand = jnp.array([[5, 9, 11]])  # candidate 0 collides with slot 0
+
+    from repro.core.sce import _in_bucket_losses_jnp
+
+    def f(y_b):
+        pos = jnp.ones((1, 2))
+        return jnp.sum(_in_bucket_losses_jnp(x_b, y_b, tgt_b, cand, pos))
+
+    g = jax.grad(f)(y_b)
+    # candidate 0 is masked for slot 0 but is a real negative for slot 1,
+    # so its grad comes only from slot 1's softmax term; verify by
+    # masking slot 1 too → then grad must vanish entirely.
+    tgt_both = jnp.array([[5, 5]])
+
+    def f2(y_b):
+        pos = jnp.ones((1, 2))
+        return jnp.sum(
+            _in_bucket_losses_jnp(x_b, y_b, tgt_both, cand, pos)
+        )
+
+    g2 = jax.grad(f2)(y_b)
+    np.testing.assert_allclose(np.asarray(g2[0, 0]), 0.0, atol=1e-7)
+    assert np.abs(np.asarray(g[0, 0])).max() > 0  # sanity: unmasked ≠ 0
+
+
+def test_valid_mask_excludes_padding(key):
+    x, y, t = _problem(key, n=32)
+    vm = jnp.arange(32) < 20
+    cfg = SCEConfig(4, 8, 32, use_mix=True)
+    loss = sce_loss(x, y, t, key=key, cfg=cfg, valid_mask=vm)
+    assert np.isfinite(float(loss))
+    # padding positions must receive zero gradient
+    g = jax.grad(
+        lambda x: sce_loss(x, y, t, key=key, cfg=cfg, valid_mask=vm)
+    )(x)
+    np.testing.assert_allclose(np.asarray(g)[20:], 0.0, atol=1e-7)
+
+
+def test_mix_aligns_buckets_with_data(key):
+    """The Mix mechanism (paper §3.2): B = ΩX spans informative directions
+    of X, so Mix bucket centers correlate with X's principal direction far
+    above the ~1/√d chance level of plain randn centers. (The downstream
+    unique-selection gain — paper Fig. 4a — is measured over real training
+    dynamics by benchmarks/mix_ablation.py; a single random draw is too
+    noisy for a hard unit-test inequality.)"""
+    d, n = 64, 256
+    direction = jax.random.normal(key, (d,))
+    direction /= jnp.linalg.norm(direction)
+    coef = jax.random.normal(jax.random.fold_in(key, 1), (n, 1))
+    x = coef * direction[None, :] + 0.05 * jax.random.normal(
+        jax.random.fold_in(key, 2), (n, d)
+    )
+
+    def mean_alignment(use_mix):
+        total = 0.0
+        for s in range(8):
+            b = make_bucket_centers(
+                jax.random.fold_in(key, 100 + s), x, 8, use_mix=use_mix
+            )
+            bn = b / jnp.linalg.norm(b, axis=-1, keepdims=True)
+            total += float(jnp.mean(jnp.abs(bn @ direction))) / 8
+        return total
+
+    mix, nomix = mean_alignment(True), mean_alignment(False)
+    assert mix > 0.5  # strongly aligned with the data direction
+    assert nomix < 3.0 / jnp.sqrt(d) * 2  # chance-level alignment
+    assert mix > 3 * nomix
+
+
+def test_softcap_applied(key):
+    x, y, t = _problem(key, scale=10.0)
+    cfg_plain = SCEConfig(1, 64, 100, use_mix=False)
+    cfg_cap = SCEConfig(1, 64, 100, use_mix=False, logit_softcap=5.0)
+    a = float(sce_loss(x, y, t, key=key, cfg=cfg_plain))
+    b = float(sce_loss(x, y, t, key=key, cfg=cfg_cap))
+    assert a != pytest.approx(b)  # softcap changes large logits
+    assert np.isfinite(b)
+
+
+def test_from_alpha_beta_parametrization():
+    cfg = SCEConfig.from_alpha_beta(1024, 10_000, alpha=2.0, beta=1.0)
+    assert cfg.n_buckets == cfg.bucket_size_x == 64  # 2·√1024
+    cfg4 = SCEConfig.from_alpha_beta(1024, 10_000, alpha=2.0, beta=4.0)
+    assert cfg4.n_buckets == 128 and cfg4.bucket_size_x == 32
+    assert cfg4.n_buckets * cfg4.bucket_size_x == cfg.n_buckets * cfg.bucket_size_x
+
+
+def test_memory_model_matches_paper():
+    """Paper §3.1: loss tensor n_b × b_x × b_y ≪ N × C."""
+    from repro.core.sce import full_ce_memory_bytes, sce_loss_memory_bytes
+
+    cfg = SCEConfig.from_alpha_beta(128 * 200, 10**6, bucket_size_y=256)
+    assert sce_loss_memory_bytes(cfg) < full_ce_memory_bytes(
+        128 * 200, 10**6
+    ) / 100  # the paper's ~100× headline

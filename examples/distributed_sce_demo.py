@@ -19,11 +19,11 @@ from repro.core.distributed_sce import (  # noqa: E402
     sce_loss_sharded_ref,
 )
 from repro.core.sce import SCEConfig  # noqa: E402
+from repro.dist import make_mesh, set_mesh  # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
 
     key = jax.random.PRNGKey(0)
@@ -36,7 +36,7 @@ def main():
           f"b_y={cfg.bucket_size_y} (per data shard)")
 
     for mode in ("exact", "union"):
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             loss = jax.jit(
                 lambda x, y: sce_loss_sharded(
                     x, y, t, key=key, cfg=cfg, mesh=mesh, mode=mode

@@ -11,9 +11,11 @@ Two distribution strategies (``SCEConfig → dist_mode`` chosen by caller):
 
 ``"exact"`` — the n_b buckets of a data shard are split across model
   shards (n_b/m each). Stage 1: every model shard takes its local
-  top-b_y per bucket and ships (value, id, embedding-row) triples through
-  ONE all_to_all (1/m the payload of an all-gather); stage 2: a local
-  top-k over the m·b_y union reproduces the exact global top-b_y.
+  top-min(b_y, C/m) per bucket and ships (value, id, embedding-row)
+  triples through ONE all_to_all (1/m the payload of an all-gather);
+  stage 2: a local top-min(b_y, C) over the union reproduces the exact
+  global top-b_y — both clips mirror the oracle's min(b_y, C), so the
+  equality holds even when b_y exceeds a catalog slice.
   Identical selection to a single-device run → the equality tests.
   Memory: the stage-1 (n_b, b_y, d) gather — fine for recsys widths
   (d=64), heavy for LM widths (d≥2304).
@@ -40,11 +42,12 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core.sce import NEG_INF, SCEConfig, apply_softcap, make_bucket_centers
+from repro.dist import shard_map
 from repro.dist.collectives import all_to_all_bucket_shuffle
-from repro.dist.sharding import data_axes
+from repro.dist.sharding import batch_spec, catalog_spec, data_axes, replicated_spec
 
 
 def round_up(x: int, multiple: int) -> int:
@@ -98,7 +101,12 @@ def _sce_inner_exact(
 
     n_b = cfg.n_buckets  # caller guarantees n_b % m == 0
     nb_l = n_b // m
-    b_y = min(cfg.bucket_size_y, c_local)
+    # Stage-1 candidates are clipped per catalog SLICE, stage-2 per full
+    # catalog — mirroring sce_loss_sharded_ref's min(b_y, C) clip so the
+    # equality holds even when bucket_size_y > C/m (a shard then simply
+    # contributes its whole slice).
+    b_y_loc = min(cfg.bucket_size_y, c_local)
+    b_y = min(cfg.bucket_size_y, m * c_local)
     b_x = min(cfg.bucket_size_x, n_local)
 
     key_l = jax.random.fold_in(key, _data_shard_index(dp))
@@ -110,17 +118,17 @@ def _sce_inner_exact(
     #    (value, id, row) candidate triples; exact top-b_y over the union.
     ys = jax.lax.stop_gradient(y_l)
     yp = b @ ys.T  # (n_b, C_local)
-    vals, idx = jax.lax.top_k(yp, b_y)
-    emb = jnp.take(y_l, idx, axis=0)  # (n_b, b_y, d) — differentiable
+    vals, idx = jax.lax.top_k(yp, b_y_loc)
+    emb = jnp.take(y_l, idx, axis=0)  # (n_b, b_y_loc, d) — differentiable
     gidx = idx + tp_i * c_local
 
-    vals_s = all_to_all_bucket_shuffle(vals, tp)  # (m, nb_l, b_y)
+    vals_s = all_to_all_bucket_shuffle(vals, tp)  # (m, nb_l, b_y_loc)
     gidx_s = all_to_all_bucket_shuffle(gidx, tp)
-    emb_s = all_to_all_bucket_shuffle(emb, tp)  # (m, nb_l, b_y, d)
+    emb_s = all_to_all_bucket_shuffle(emb, tp)  # (m, nb_l, b_y_loc, d)
 
-    vals_u = jnp.swapaxes(vals_s, 0, 1).reshape(nb_l, m * b_y)
-    gidx_u = jnp.swapaxes(gidx_s, 0, 1).reshape(nb_l, m * b_y)
-    emb_u = jnp.swapaxes(emb_s, 0, 1).reshape(nb_l, m * b_y, d)
+    vals_u = jnp.swapaxes(vals_s, 0, 1).reshape(nb_l, m * b_y_loc)
+    gidx_u = jnp.swapaxes(gidx_s, 0, 1).reshape(nb_l, m * b_y_loc)
+    emb_u = jnp.swapaxes(emb_s, 0, 1).reshape(nb_l, m * b_y_loc, d)
     _, sel = jax.lax.top_k(vals_u, b_y)  # (nb_l, b_y)
     cand_ids = jnp.take_along_axis(gidx_u, sel, axis=-1)
     y_b = jnp.take_along_axis(emb_u, sel[..., None], axis=-2)
@@ -294,11 +302,17 @@ def sce_loss_sharded(
         )
     else:
         raise ValueError(mode)
-    fn = jax.shard_map(
+    fn = shard_map(
         inner,
         mesh=mesh,
-        in_specs=(P(), P(dp, None), P(tp, None), P(dp), P(dp)),
-        out_specs=P(),
+        in_specs=(
+            replicated_spec(),
+            batch_spec(mesh, 2),
+            catalog_spec(mesh),
+            batch_spec(mesh, 1),
+            batch_spec(mesh, 1),
+        ),
+        out_specs=replicated_spec(),
     )
     return fn(key, x, y, targets, valid_mask)
 
@@ -350,7 +364,8 @@ def sce_loss_sharded_ref(
         _, idx_x = jax.lax.top_k(xp, b_x)
 
         if mode == "exact":
-            _, idx_y = jax.lax.top_k(b @ ys.T, cfg.bucket_size_y)
+            # same clip as the sharded path: at most the full catalog
+            _, idx_y = jax.lax.top_k(b @ ys.T, min(cfg.bucket_size_y, c))
         else:  # union of per-shard top-(b_y/m) over catalog slices
             c_l = c // tp_size
             k_local = max(1, min(cfg.bucket_size_y // tp_size, c_l))

@@ -1,0 +1,159 @@
+"""Loss- and serve-side collectives for the vocab-parallel stack.
+
+Two primitives cover every cross-``model``-shard exchange the SCE stack
+performs (DESIGN.md §2/§4):
+
+  * :func:`all_to_all_bucket_shuffle` — the ONE all_to_all of exact-mode
+    distributed MIPS: every model shard ships its per-bucket local
+    top-k (value, id, embedding-row) candidate triples to the shard that
+    owns each bucket. Payload is 1/m of the equivalent all-gather.
+  * :func:`distributed_topk` — exact two-stage top-k over a row-sharded
+    score matrix: local top-k, one all-gather of the (m · k) candidate
+    (value, global-id) pairs, local top-k over the union. The result is
+    replicated over the axis, and ties resolve identically to a
+    single-device ``lax.top_k`` (lower global id wins).
+
+Both degrade to a single-device fallback when called outside
+``shard_map`` (no axis bound) so the same step code runs on one device.
+
+Payload accounting
+------------------
+Every collective records its modelled per-device wire bytes into a
+trace-time log (shapes are static when the call is traced). The dry-run
+(``launch/dryrun.py``) resets the log before lowering a cell and attaches
+the captured records next to the HLO-parsed collective bytes, giving an
+analytic cross-check of the wire model. Retracing (e.g. under
+``jax.value_and_grad``) may record a call more than once; the log is a
+model of what the *traced program text* contains, not an execution count.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_PAYLOAD_LOG: List[Dict[str, Any]] = []
+
+
+def reset_payload_log() -> None:
+    """Clear the trace-time collective payload log."""
+    _PAYLOAD_LOG.clear()
+
+
+def payload_log() -> List[Dict[str, Any]]:
+    """Records appended since the last reset (most recent last)."""
+    return list(_PAYLOAD_LOG)
+
+
+def payload_summary() -> Dict[str, Any]:
+    """Aggregate of the log in the same shape as dryrun's HLO report."""
+    per_op: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    for rec in _PAYLOAD_LOG:
+        per_op[rec["op"]] = per_op.get(rec["op"], 0.0) + rec["wire_bytes"]
+        counts[rec["op"]] = counts.get(rec["op"], 0) + 1
+    return {
+        "total_bytes": sum(per_op.values()),
+        "per_op_bytes": per_op,
+        "counts": counts,
+    }
+
+
+def _record(op: str, axis_name: str, shape, dtype, group: int) -> None:
+    size = math.prod(shape) * jnp.dtype(dtype).itemsize
+    # ring model, matching launch/dryrun.py: S·(g-1)/g over the wire
+    wire = size * (group - 1) / max(group, 1)
+    _PAYLOAD_LOG.append(
+        {
+            "op": op,
+            "axis": axis_name,
+            "shape": tuple(shape),
+            "dtype": jnp.dtype(dtype).name,
+            "payload_bytes": size,
+            "wire_bytes": wire,
+            "group_size": group,
+        }
+    )
+
+
+def _axis_size(axis_name: str) -> Optional[int]:
+    """Static size of a bound mesh axis, or None outside ``shard_map``."""
+    try:
+        return int(jax.lax.psum(1, axis_name))
+    except NameError:  # unbound axis name — single-device fallback
+        return None
+
+
+def all_to_all_bucket_shuffle(x: jax.Array, axis_name: str) -> jax.Array:
+    """Route per-bucket candidate payloads to their owning model shard.
+
+    ``x``: ``(n_b, ...)`` — this shard's payload for ALL ``n_b`` buckets
+    (e.g. local top-k values, ids, or gathered embedding rows). Buckets
+    are owned contiguously: shard ``j`` owns buckets
+    ``[j·n_b/m, (j+1)·n_b/m)``.
+
+    Returns ``(m, n_b/m, ...)`` where ``out[i]`` is shard ``i``'s payload
+    for this shard's owned buckets. Differentiable (the transpose of an
+    all_to_all is the inverse all_to_all), so exact-mode candidate
+    embeddings carry gradients back to their home shard.
+
+    Single-device fallback (no bound axis): ``reshape`` to ``(1, n_b, ...)``.
+    """
+    m = _axis_size(axis_name)
+    if m is None:
+        return x.reshape((1,) + x.shape)
+    n_b = x.shape[0]
+    assert n_b % m == 0, (n_b, m)
+    xs = x.reshape((m, n_b // m) + x.shape[1:])
+    _record("all-to-all", axis_name, xs.shape, x.dtype, m)
+    return jax.lax.all_to_all(xs, axis_name, split_axis=0, concat_axis=0)
+
+
+def distributed_topk(
+    scores: jax.Array, k: int, axis_name: str
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Exact global top-k over the last (``axis_name``-sharded) dim.
+
+    ``scores``: ``(..., C_local)`` — each shard's slice of a row-sharded
+    score matrix whose global column ``c`` lives on shard ``c // C_local``.
+
+    Two stages: (1) local top-``min(k, C_local)``; (2) one all-gather of
+    the ``(m · k_local)`` candidate (value, global-id) pairs and a local
+    top-k over the union. Stage 2 runs identically on every shard, so the
+    result is replicated over ``axis_name``. Selection (including tie
+    order) matches single-device ``lax.top_k`` on the concatenated
+    scores: candidates are unioned in ascending shard order, and
+    ``lax.top_k`` breaks value ties toward earlier positions ⇒ lower
+    global id, exactly the dense tie rule.
+
+    Returns ``(values, global_ids, source_shard)``, each ``(..., k)``
+    (``k`` is clamped to the global column count).
+
+    Single-device fallback: plain ``lax.top_k`` with zero source shards.
+    """
+    c_local = scores.shape[-1]
+    m = _axis_size(axis_name)
+    if m is None:
+        vals, idx = jax.lax.top_k(scores, min(k, c_local))
+        return vals, idx, jnp.zeros_like(idx)
+
+    k_local = min(k, c_local)
+    shard = jax.lax.axis_index(axis_name)
+    vals_l, idx_l = jax.lax.top_k(scores, k_local)
+    gids_l = idx_l + shard * c_local
+
+    _record("all-gather", axis_name, (m,) + vals_l.shape, vals_l.dtype, m)
+    _record("all-gather", axis_name, (m,) + gids_l.shape, gids_l.dtype, m)
+    vals_g = jax.lax.all_gather(vals_l, axis_name, axis=0)  # (m, ..., k_l)
+    gids_g = jax.lax.all_gather(gids_l, axis_name, axis=0)
+
+    union_shape = scores.shape[:-1] + (m * k_local,)
+    vals_u = jnp.moveaxis(vals_g, 0, -2).reshape(union_shape)
+    gids_u = jnp.moveaxis(gids_g, 0, -2).reshape(union_shape)
+
+    kk = min(k, m * k_local)
+    vals, sel = jax.lax.top_k(vals_u, kk)
+    gids = jnp.take_along_axis(gids_u, sel, axis=-1)
+    return vals, gids, gids // c_local

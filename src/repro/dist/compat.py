@@ -1,0 +1,101 @@
+"""JAX version bridge for the distribution substrate.
+
+The substrate targets the modern distribution API (``jax.shard_map``,
+``jax.set_mesh``, ``jax.make_mesh(..., axis_types=...)``); older jaxlibs
+(this container ships 0.4.x) expose the same machinery under
+``jax.experimental.shard_map`` / mesh context managers and have no axis
+types at all. Everything in the repo goes through these three wrappers so
+the rest of the stack is written once, against the new spelling.
+
+No behavioural shimming beyond the name bridge:
+  * ``shard_map``   — replication checking is left off on old JAX (the
+    0.4.x checker predates several rules the SCE losses rely on, e.g.
+    ``lax.map``-wrapped remat bodies); the distributed/oracle equality
+    tests in ``tests/test_distributed.py`` are the correctness gate.
+  * ``make_mesh``   — ``axis_types`` is honoured when supported, dropped
+    otherwise (old JAX meshes are implicitly fully-Auto).
+  * ``set_mesh``    — falls back to the ``Mesh`` context manager, which
+    is what ``jax.set_mesh`` wraps for the scoped-mesh use here.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+try:  # modern spelling
+    from jax.sharding import AxisType
+
+    _HAS_AXIS_TYPES = True
+except ImportError:  # pragma: no cover - depends on installed jax
+
+    class AxisType:  # type: ignore[no-redef]
+        """Stand-in for ``jax.sharding.AxisType`` on old JAX (all axes
+        behave as Auto there, so the distinction is vacuous)."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    _HAS_AXIS_TYPES = False
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    axis_types: Optional[Sequence] = None,
+    devices=None,
+) -> Mesh:
+    """``jax.make_mesh`` that tolerates old JAX (no ``axis_types``).
+
+    When unspecified, axes default to Auto on new JAX — matching old
+    JAX's only behaviour, so meshes are identical across versions.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if _HAS_AXIS_TYPES:
+        if axis_types is None:
+            axis_types = (AxisType.Auto,) * len(tuple(axis_names))
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names, axis_types=tuple(axis_types), **kwargs
+            )
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def set_mesh(mesh: Mesh):
+    """Context manager scoping ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` where available; the ``Mesh`` object's own context
+    manager otherwise (every use in this repo also passes the mesh
+    explicitly to ``jit``/``shard_map``, so the ambient mesh only needs
+    to *exist*, not to carry axis types).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh: Mesh, in_specs, out_specs):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+        )
+
+else:  # 0.4.x spelling
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f, *, mesh: Mesh, in_specs, out_specs):
+        return _shard_map_exp(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_rep=False,
+        )

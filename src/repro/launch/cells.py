@@ -14,17 +14,22 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs import get_arch
 from repro.configs.common import ArchSpec, ShapeSpec
+from repro.dist import set_mesh
 from repro.dist.sharding import (
     batch_spec,
-    data_axes,
+    lm_logits_spec,
+    lm_tokens_spec,
     named_sharding_tree,
     opt_state_specs,
     recsys_param_specs,
+    replicated_sharding,
+    replicated_spec,
     replicated_specs,
+    residual_act_spec,
     seqrec_param_specs,
     transformer_cache_specs,
     transformer_param_specs,
@@ -57,7 +62,7 @@ class Cell:
             out_shardings=self.out_shardings,
             donate_argnums=self.donate_argnums,
         )
-        with jax.set_mesh(self.mesh):
+        with set_mesh(self.mesh):
             return jitted.lower(*self.args)
 
 
@@ -98,7 +103,6 @@ def _lm_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
     p_specs = transformer_param_specs(
         cfg, mesh, fsdp=fsdp_eff, inference=inference
     )
-    dp = data_axes(mesh)
     gb = shape.dims["global_batch"]
     seq = shape.dims["seq_len"]
     n_micro = max(
@@ -123,17 +127,17 @@ def _lm_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
             "targets": _sds((gb, seq), jnp.int32),
             "valid": _sds((gb, seq), jnp.bool_),
         }
-        b_specs = {k: P(dp, None) for k in batch_abs}
+        b_specs = {k: batch_spec(mesh, v.ndim) for k, v in batch_abs.items()}
         return Cell(
             arch, shape, mesh, fn,
             args=(params_abs, opt_abs, batch_abs, _key_abs()),
             in_shardings=(
                 _ns(mesh, p_specs), _ns(mesh, o_specs),
-                _ns(mesh, b_specs), NamedSharding(mesh, P()),
+                _ns(mesh, b_specs), replicated_sharding(mesh),
             ),
             out_shardings=(
                 _ns(mesh, p_specs), _ns(mesh, o_specs),
-                {"loss": NamedSharding(mesh, P())},
+                {"loss": replicated_sharding(mesh)},
             ),
             donate_argnums=(0, 1),
             meta={
@@ -153,20 +157,20 @@ def _lm_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
         # dim to 'model' so per-layer K/V are born in the cache layout —
         # no batch→seq reshard all-gathers
         seq_par = bool(opts.get("seq_parallel"))
-        act_spec = P(dp, "model", None) if seq_par else None
+        act_spec = residual_act_spec(mesh, seq_parallel=seq_par)
         fn = steps_lib.make_lm_prefill_step(cfg, act_spec=act_spec)
         tokens_abs = _sds((gb, seq), jnp.int32)
         cache_specs = transformer_cache_specs(cfg, mesh)
-        logits_spec = P(dp, None, "model")
-        tok_spec = P(dp, "model") if seq_par else P(dp, None)
+        logits_spec = lm_logits_spec(mesh)
+        tok_spec = lm_tokens_spec(mesh, seq_parallel=seq_par)
         return Cell(
             arch, shape, mesh, fn,
             args=(params_abs, tokens_abs),
             in_shardings=(
-                _ns(mesh, p_specs), NamedSharding(mesh, tok_spec)
+                _ns(mesh, p_specs), _ns(mesh, tok_spec)
             ),
             out_shardings=(
-                NamedSharding(mesh, logits_spec), _ns(mesh, cache_specs)
+                _ns(mesh, logits_spec), _ns(mesh, cache_specs)
             ),
             meta={"params": cfg.param_count(),
                   "tokens_per_step": gb * seq,
@@ -182,20 +186,21 @@ def _lm_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
     cache_specs = transformer_cache_specs(cfg, mesh, seq_shard=seq_shard)
     tokens_abs = _sds((gb, 1), jnp.int32)
     pos_abs = _sds((), jnp.int32)
-    logits_spec = (
-        P(None, None, "model") if seq_shard else P(dp, None, "model")
-    )
+    logits_spec = lm_logits_spec(mesh, seq_shard=seq_shard)
     return Cell(
         arch, shape, mesh, fn,
         args=(params_abs, cache_abs, tokens_abs, pos_abs),
         in_shardings=(
             _ns(mesh, p_specs),
             _ns(mesh, cache_specs),
-            NamedSharding(mesh, P() if seq_shard else P(dp, None)),
-            NamedSharding(mesh, P()),
+            _ns(
+                mesh,
+                replicated_spec() if seq_shard else batch_spec(mesh, 2),
+            ),
+            replicated_sharding(mesh),
         ),
         out_shardings=(
-            NamedSharding(mesh, logits_spec), _ns(mesh, cache_specs)
+            _ns(mesh, logits_spec), _ns(mesh, cache_specs)
         ),
         donate_argnums=(1,),
         meta={"params": cfg.param_count(), "kv_positions": gb * seq,
@@ -213,7 +218,6 @@ def _seqrec_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
     )
     params_abs = _abs_params(functools.partial(init_fn, cfg=cfg))
     p_specs = seqrec_param_specs(cfg, mesh)
-    dp = data_axes(mesh)
     bidirectional = not cfg.causal
 
     if shape.kind == "train":
@@ -228,17 +232,17 @@ def _seqrec_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
         if not bidirectional:
             batch_abs["targets"] = _sds((gb, cfg.max_len), jnp.int32)
             batch_abs["valid"] = _sds((gb, cfg.max_len), jnp.bool_)
-        b_specs = {k: P(dp, None) for k in batch_abs}
+        b_specs = {k: batch_spec(mesh, v.ndim) for k, v in batch_abs.items()}
         return Cell(
             arch, shape, mesh, fn,
             args=(params_abs, opt_abs, batch_abs, _key_abs()),
             in_shardings=(
                 _ns(mesh, p_specs), _ns(mesh, o_specs),
-                _ns(mesh, b_specs), NamedSharding(mesh, P()),
+                _ns(mesh, b_specs), replicated_sharding(mesh),
             ),
             out_shardings=(
                 _ns(mesh, p_specs), _ns(mesh, o_specs),
-                {"loss": NamedSharding(mesh, P())},
+                {"loss": replicated_sharding(mesh)},
             ),
             donate_argnums=(0, 1),
             meta={
@@ -261,11 +265,11 @@ def _seqrec_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
             arch, shape, mesh, fn,
             args=(params_abs, tokens_abs),
             in_shardings=(
-                _ns(mesh, p_specs), NamedSharding(mesh, P(dp, None))
+                _ns(mesh, p_specs), _ns(mesh, batch_spec(mesh, 2))
             ),
             out_shardings=(
-                NamedSharding(mesh, P(dp, None)),
-                NamedSharding(mesh, P(dp, None)),
+                _ns(mesh, batch_spec(mesh, 2)),
+                _ns(mesh, batch_spec(mesh, 2)),
             ),
             meta={"params": cfg.param_count(), "catalog": cfg.n_items,
                   # dominant loop: the lax.map over batch score-chunks
@@ -282,11 +286,11 @@ def _seqrec_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
         args=(params_abs, tokens_abs, cand_abs),
         in_shardings=(
             _ns(mesh, p_specs),
-            NamedSharding(mesh, P()),
-            NamedSharding(mesh, P()),
+            replicated_sharding(mesh),
+            replicated_sharding(mesh),
         ),
         out_shardings=(
-            NamedSharding(mesh, P()), NamedSharding(mesh, P())
+            replicated_sharding(mesh), replicated_sharding(mesh)
         ),
         meta={"params": cfg.param_count(), "n_candidates": n_cand,
               "loop_multiplier": cfg.n_layers},
@@ -309,7 +313,6 @@ def _recsys_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
     init_fn = _recsys_init_fn(arch.name)
     params_abs = _abs_params(functools.partial(init_fn, cfg=cfg))
     p_specs = recsys_param_specs(params_abs, mesh)
-    dp = data_axes(mesh)
     n_dense = getattr(cfg, "n_dense", 1)
     n_fields = len(cfg.vocab_sizes)
     hot = cfg.hot
@@ -329,21 +332,17 @@ def _recsys_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
         o_specs = opt_state_specs(arch.optimizer, params_abs, p_specs, opt_abs)
         gb = shape.dims["batch"]
         batch_abs = batch_abs_for(gb)
-        b_specs = {
-            "dense": P(dp, None),
-            "sparse_ids": P(dp, None, None),
-            "labels": P(dp),
-        }
+        b_specs = {k: batch_spec(mesh, v.ndim) for k, v in batch_abs.items()}
         return Cell(
             arch, shape, mesh, fn,
             args=(params_abs, opt_abs, batch_abs, _key_abs()),
             in_shardings=(
                 _ns(mesh, p_specs), _ns(mesh, o_specs),
-                _ns(mesh, b_specs), NamedSharding(mesh, P()),
+                _ns(mesh, b_specs), replicated_sharding(mesh),
             ),
             out_shardings=(
                 _ns(mesh, p_specs), _ns(mesh, o_specs),
-                {"loss": NamedSharding(mesh, P())},
+                {"loss": replicated_sharding(mesh)},
             ),
             donate_argnums=(0, 1),
             meta={
@@ -362,10 +361,10 @@ def _recsys_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
             args=(params_abs, b["dense"], b["sparse_ids"]),
             in_shardings=(
                 _ns(mesh, p_specs),
-                NamedSharding(mesh, P(dp, None)),
-                NamedSharding(mesh, P(dp, None, None)),
+                _ns(mesh, batch_spec(mesh, 2)),
+                _ns(mesh, batch_spec(mesh, 3)),
             ),
-            out_shardings=NamedSharding(mesh, P(dp)),
+            out_shardings=_ns(mesh, batch_spec(mesh, 1)),
             meta={"params": cfg.param_count(), "loop_multiplier": 1},
         )
 
@@ -382,11 +381,13 @@ def _recsys_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
         ),
         in_shardings=(
             _ns(mesh, p_specs),
-            NamedSharding(mesh, P()),
-            NamedSharding(mesh, P()),
-            NamedSharding(mesh, P()),
+            replicated_sharding(mesh),
+            replicated_sharding(mesh),
+            replicated_sharding(mesh),
         ),
-        out_shardings=(NamedSharding(mesh, P()), NamedSharding(mesh, P())),
+        out_shardings=(
+            replicated_sharding(mesh), replicated_sharding(mesh)
+        ),
         meta={"params": cfg.param_count(), "n_candidates": n_cand,
               # lax.map over candidate chunks of 4096
               "loop_multiplier": -(-n_cand // 4096)},
@@ -402,7 +403,6 @@ def _gnn_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
         functools.partial(schnet_lib.init_params, cfg=cfg)
     )
     p_specs = replicated_specs(params_abs)
-    dp = data_axes(mesh)
     dims = shape.dims
 
     fn, (opt_init, _) = steps_lib.make_gnn_train_step(arch, cfg, mesh, shape)
@@ -425,12 +425,13 @@ def _gnn_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
             "targets": _sds((bn,), jnp.float32),
         }
         b_specs = {
-            "node_feats": P(None, None),
-            "positions": P(None, None),
-            "edge_index": P(None, dp),
-            "edge_valid": P(dp),
-            "seed_local": P(None),
-            "targets": P(None),
+            # sampled subgraph: only edges shard (messages are the work)
+            "node_feats": replicated_spec(),
+            "positions": replicated_spec(),
+            "edge_index": batch_spec(mesh, 2, batch_dim=1),
+            "edge_valid": batch_spec(mesh, 1),
+            "seed_local": replicated_spec(),
+            "targets": replicated_spec(),
         }
     elif shape.name == "molecule":
         b = dims["batch"]
@@ -444,11 +445,11 @@ def _gnn_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
             "targets": _sds((b,), jnp.float32),
         }
         b_specs = {
-            "node_feats": P(dp, None),
-            "positions": P(dp, None),
-            "edge_index": P(None, dp),
-            "graph_ids": P(dp),
-            "targets": P(dp),
+            "node_feats": batch_spec(mesh, 2),
+            "positions": batch_spec(mesh, 2),
+            "edge_index": batch_spec(mesh, 2, batch_dim=1),
+            "graph_ids": batch_spec(mesh, 1),
+            "targets": batch_spec(mesh, 1),
         }
     else:  # full-batch graphs (full_graph_sm, ogb_products)
         n, e = dims["n_nodes"], dims["n_edges"]
@@ -465,13 +466,13 @@ def _gnn_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
             "node_valid": _sds((n_pad,), jnp.bool_),
             "targets": _sds((n_pad,), jnp.float32),
         }
-        node_spec = P(dp, None) if big else P(None, None)
-        node_vec = P(dp) if big else P(None)
+        node_spec = batch_spec(mesh, 2) if big else replicated_spec()
+        node_vec = batch_spec(mesh, 1) if big else replicated_spec()
         b_specs = {
             "node_feats": node_spec,
             "positions": node_spec,
-            "edge_index": P(None, dp),
-            "edge_valid": P(dp),
+            "edge_index": batch_spec(mesh, 2, batch_dim=1),
+            "edge_valid": batch_spec(mesh, 1),
             "node_valid": node_vec,
             "targets": node_vec,
         }
@@ -481,11 +482,11 @@ def _gnn_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
         args=(params_abs, opt_abs, batch_abs, _key_abs()),
         in_shardings=(
             _ns(mesh, p_specs), _ns(mesh, o_specs),
-            _ns(mesh, b_specs), NamedSharding(mesh, P()),
+            _ns(mesh, b_specs), replicated_sharding(mesh),
         ),
         out_shardings=(
             _ns(mesh, p_specs), _ns(mesh, o_specs),
-            {"loss": NamedSharding(mesh, P())},
+            {"loss": replicated_sharding(mesh)},
         ),
         donate_argnums=(0, 1),
         meta={"params": cfg.param_count(),

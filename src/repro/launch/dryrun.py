@@ -111,22 +111,32 @@ def collective_bytes(hlo_text: str, n_devices: int):
 
 
 def run_cell(arch_name: str, shape_name: str, mesh_kind: str) -> dict:
+    from repro.dist import collectives as coll_lib
     from repro.launch.cells import build_cell  # after XLA_FLAGS
 
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     n_dev = mesh.size
     t0 = time.time()
     cell = build_cell(arch_name, shape_name, mesh)
+    # analytic cross-check: repro.dist collectives self-report their
+    # modelled wire bytes at trace time (resets around the lowering so
+    # the log covers exactly this cell's trace)
+    coll_lib.reset_payload_log()
     lowered = cell.lower()
+    modeled = coll_lib.payload_summary()
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # old JAX: one dict per program
+        cost = cost[0] if cost else {}
+    cost = cost or {}
     hlo = compiled.as_text()
     coll = collective_bytes(hlo, n_dev)
+    coll["modeled_dist_collectives"] = modeled
 
     rec = {
         "arch": arch_name,

@@ -9,29 +9,38 @@ Single pod: 256 chips as (data=16, model=16). Multi-pod: 2 pods × 256 as
 slice of gradient reductions (DCI), everything bandwidth-hungry stays on
 the in-pod ICI axes. The same axis names scale to 1000+ nodes by growing
 ``pod`` — no code changes, only the mesh shape.
+
+Axis names and construction live in ``repro.dist`` (compat-bridged
+``make_mesh``); this module only chooses shapes.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.dist import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
-def make_host_mesh(*, model: int = 1):
-    """Small mesh over whatever devices exist — CPU tests and examples."""
+def make_host_mesh(*, model: int = 1, max_data: int = 0):
+    """Small mesh over whatever devices exist — CPU tests and examples.
+
+    ``max_data`` > 0 caps the data axis to the largest size that divides
+    it (e.g. the global batch), so smoke-scale batches still shard
+    evenly when the host exposes many (virtual) devices; surplus devices
+    are simply left out of the mesh.
+    """
     n = len(jax.devices())
     model = min(model, n)
     data = n // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+    if max_data > 0:
+        while data > 1 and max_data % data != 0:
+            data -= 1
+    return make_mesh((data, model), ("data", "model"))
 
 
 def dp_size(mesh) -> int:

@@ -30,8 +30,9 @@ import jax.numpy as jnp
 from repro.core.distributed_sce import round_up, sce_loss_sharded
 from repro.core.losses import ce_chunked, make_loss
 from repro.core.sce import SCEConfig, sce_loss
+from repro.dist import shard_map
 from repro.dist.collectives import distributed_topk
-from repro.dist.sharding import data_axes
+from repro.dist.sharding import batch_spec, catalog_spec, replicated_spec
 from repro.launch.mesh import dp_size
 from repro.models import bert4rec as b4r_lib
 from repro.models import recsys as recsys_lib
@@ -39,7 +40,6 @@ from repro.models import sasrec as sasrec_lib
 from repro.models import schnet as schnet_lib
 from repro.models import transformer as tf_lib
 from repro.optim import make_optimizer
-from jax.sharding import PartitionSpec as P
 
 NEG_INF = -1e30
 
@@ -317,7 +317,6 @@ def make_seqrec_serve_step(arch, cfg, mesh, *, top_k: int = 100,
     the top-k items — shard_map two-stage top-k, chunked over the batch
     so the per-chunk score slice stays small (DESIGN.md §4)."""
     bidirectional = not cfg.causal
-    dp = data_axes(mesh) if mesh is not None else ()
 
     def serve_step(params, tokens):
         hidden = (
@@ -362,11 +361,11 @@ def make_seqrec_serve_step(arch, cfg, mesh, *, top_k: int = 100,
             idx = idx.reshape(-1, top_k)[:b_l]
             return vals, idx
 
-        fn = jax.shard_map(
+        fn = shard_map(
             inner,
             mesh=mesh,
-            in_specs=(P(dp, None), P("model", None)),
-            out_specs=(P(dp, None), P(dp, None)),
+            in_specs=(batch_spec(mesh, 2), catalog_spec(mesh)),
+            out_specs=(batch_spec(mesh, 2), batch_spec(mesh, 2)),
         )
         return fn(x_last, y)
 
@@ -407,11 +406,15 @@ def make_seqrec_retrieval_step(arch, cfg, mesh, *, top_k: int = 100):
             vals, idx = jax.lax.top_k(scores, top_k)
             return vals, idx
 
-        fn = jax.shard_map(
+        fn = shard_map(
             inner,
             mesh=mesh,
-            in_specs=(P(), P("model", None), P()),
-            out_specs=(P(), P()),
+            in_specs=(
+                replicated_spec(),
+                catalog_spec(mesh),
+                replicated_spec(),
+            ),
+            out_specs=(replicated_spec(), replicated_spec()),
         )
         return fn(x_last, y, candidate_ids)
 

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_arch
+from repro.dist import set_mesh
 from repro.data import (
     ClickDataConfig,
     ClickstreamDataset,
@@ -162,7 +163,7 @@ def train(
 ) -> Dict[str, Any]:
     """Run a real (smoke-scale) training loop; returns final metrics."""
     arch = get_arch(arch_name)
-    mesh = make_host_mesh()
+    mesh = make_host_mesh(max_data=batch)
     cfg, shape, data = _smoke_setup(arch, batch, seq_len)
     step_fn, (opt_init, _) = _make_step(
         arch, cfg, mesh, shape, sce_mode, grad_compression
@@ -190,7 +191,7 @@ def train(
 
     losses, times = [], []
     prev_batch = None
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for step in range(start_step, steps):
             t0 = time.time()
             host_batch, new_cursor = _host_batch(

@@ -8,6 +8,23 @@ Conventions:
   * attention is computed in query chunks with an explicit mask per chunk —
     the (B, Lq, H, Lk) score tensor is never materialized beyond one chunk,
     which is what lets 32k-token prefill compile inside a 16 GB HBM budget.
+
+Weight-layout conventions (DESIGN.md §2; built ONLY by
+``repro.dist.sharding`` — models never construct PartitionSpecs):
+  * matmul weights are stored ``(d_in, d_out)`` and applied as
+    ``x @ w``, so "column-parallel" = shard dim -1 over ``model``
+    (wq/wk/wv, gate/up projections) and "row-parallel" = shard dim -2
+    (wo, down projections) — the Megatron pairing that needs one
+    collective per block;
+  * embedding/catalog tables are ``(rows, d)`` with rows padded to a
+    shard-even multiple; rows shard over ``model`` (vocab-parallel),
+    padded rows are phantoms (never targets, masked at serve);
+  * stacked per-layer params carry a leading ``(L, ...)`` scan dim that
+    is never sharded; norms/biases replicate unless their matmul's
+    output dim is sharded (then they follow it);
+  * KV caches are ``(n_groups, B, len, H_kv, dh)``: batch over the data
+    axes, KV heads over ``model`` (see ``transformer_cache_specs`` for
+    the GQA/long-context fallbacks).
 """
 from __future__ import annotations
 

@@ -1,0 +1,70 @@
+"""Deterministic micro-shim for ``hypothesis`` (conftest installs it into
+``sys.modules`` only when the real package is absent — this container
+ships no hypothesis and nothing may be pip-installed).
+
+Covers exactly the API surface the test-suite uses: ``@given`` with
+keyword strategies, ``@settings(max_examples=..., deadline=...)``, and
+``strategies.integers``. ``@given`` expands to a fixed-seed loop over
+``max_examples`` sampled examples, so runs are reproducible; there is no
+shrinking — a failure reports the sampled kwargs in the assertion
+traceback instead.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+
+class _IntStrategy:
+    def __init__(self, min_value: int, max_value: int):
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def sample(self, rng: random.Random) -> int:
+        # Hit the boundaries first (hypothesis-style edge bias), then
+        # draw uniformly.
+        edge = rng.random()
+        if edge < 0.1:
+            return self.min_value
+        if edge < 0.2:
+            return self.max_value
+        return rng.randint(self.min_value, self.max_value)
+
+
+def _integers(min_value: int, max_value: int) -> _IntStrategy:
+    return _IntStrategy(min_value, max_value)
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+
+
+def given(**strats):
+    def deco(fn):
+        # No *args passthrough and no functools.wraps: pytest must see a
+        # zero-arg signature, not the strategy parameters (which would
+        # otherwise be collected as unknown fixtures).
+        def wrapper():
+            rng = random.Random(0x5CE)
+            n = getattr(
+                wrapper, "_max_examples", getattr(fn, "_max_examples", 10)
+            )
+            for _ in range(n):
+                fn(**{k: s.sample(rng) for k, s in strats.items()})
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__dict__.update(fn.__dict__)  # carries _max_examples
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco

@@ -1,6 +1,23 @@
 """Shared fixtures. NOTE: no global XLA_FLAGS here — smoke tests and
 benches must see the real single CPU device; multi-device tests spawn
-subprocesses (tests/test_distributed.py) with their own flags."""
+subprocesses (tests/test_distributed.py) with their own flags.
+
+When the real ``hypothesis`` is unavailable (this container bakes no
+extra deps), a deterministic micro-shim is installed into ``sys.modules``
+BEFORE test modules import it — see tests/_hypothesis_fallback.py."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:  # pragma: no cover - depends on environment
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import _hypothesis_fallback
+
+    sys.modules["hypothesis"] = _hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = _hypothesis_fallback.strategies
+
 import jax
 import numpy as np
 import pytest

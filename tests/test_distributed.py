@@ -3,9 +3,13 @@
 process must keep the real single-device view (DESIGN.md §7).
 
 Covers: distributed SCE (exact + union) value/grad equality vs the
-single-device oracle, distributed top-k, the seqrec serve/retrieval
-shard_map steps, and a miniature multi-mesh dry-run (lower + compile of a
-real train cell on (2,4) and (2,2,2) meshes)."""
+single-device oracle on dp×tp = 2×4 and 4×2 meshes, the stage-2
+candidate clip when bucket_size_y > C/m, distributed top-k, the seqrec
+serve/retrieval shard_map steps, and a miniature multi-mesh dry-run
+(lower + compile of a real train cell on (2,4) and (2,2,2) meshes).
+
+All mesh/shard_map/set_mesh spellings come from ``repro.dist`` (the
+compat bridge), so the same tests run on old and new JAX."""
 import os
 import subprocess
 import sys
@@ -22,11 +26,11 @@ def _run(body: str):
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType, PartitionSpec as P
-        mesh24 = jax.make_mesh((2, 4), ("data", "model"),
-                               axis_types=(AxisType.Auto,) * 2)
-        mesh222 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                                axis_types=(AxisType.Auto,) * 3)
+        from jax.sharding import PartitionSpec as P
+        from repro.dist import make_mesh, set_mesh, shard_map
+        mesh24 = make_mesh((2, 4), ("data", "model"))
+        mesh42 = make_mesh((4, 2), ("data", "model"))
+        mesh222 = make_mesh((2, 2, 2), ("pod", "data", "model"))
         """
     ) + textwrap.dedent(body)
     env = dict(os.environ, PYTHONPATH=REPO_SRC)
@@ -58,7 +62,7 @@ def test_distributed_sce_exact_and_union_match_oracles():
             def f_r(x, y):
                 return sce_loss_sharded_ref(x, y, t, key=key, cfg=cfg,
                                             dp_size=2, mode=mode, tp_size=4)
-            with jax.set_mesh(mesh24):
+            with set_mesh(mesh24):
                 l = jax.jit(f_d)(x, y)
                 g = jax.jit(jax.grad(f_d, argnums=(0, 1)))(x, y)
             lr = f_r(x, y)
@@ -67,6 +71,64 @@ def test_distributed_sce_exact_and_union_match_oracles():
             np.testing.assert_allclose(g[0], gr[0], rtol=1e-4, atol=1e-6)
             np.testing.assert_allclose(g[1], gr[1], rtol=1e-4, atol=1e-6)
     print("sce modes ok")
+    """)
+
+
+def test_distributed_sce_dp4_tp2_mesh():
+    """Same equality on the transposed (dp=4, tp=2) mesh — both mesh
+    aspect ratios from the acceptance grid, gradients finite through
+    both modes."""
+    _run("""
+    from repro.core.distributed_sce import sce_loss_sharded, sce_loss_sharded_ref
+    from repro.core.sce import SCEConfig
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 32))
+    y = jax.random.normal(jax.random.PRNGKey(2), (256, 32)) * 0.5
+    t = jax.random.randint(jax.random.PRNGKey(3), (128,), 0, 256)
+    for cfg in [SCEConfig(8, 16, 32, use_mix=True),
+                SCEConfig(8, 16, 32, use_mix=True, use_kernel=True)]:
+        for mode in ("exact", "union"):
+            def f_d(x, y):
+                return sce_loss_sharded(x, y, t, key=key, cfg=cfg,
+                                        mesh=mesh42, mode=mode)
+            def f_r(x, y):
+                return sce_loss_sharded_ref(x, y, t, key=key, cfg=cfg,
+                                            dp_size=4, mode=mode, tp_size=2)
+            with set_mesh(mesh42):
+                l = jax.jit(f_d)(x, y)
+                g = jax.jit(jax.grad(f_d, argnums=(0, 1)))(x, y)
+            np.testing.assert_allclose(l, f_r(x, y), rtol=1e-5)
+            gr = jax.grad(f_r, argnums=(0, 1))(x, y)
+            np.testing.assert_allclose(g[0], gr[0], rtol=1e-4, atol=1e-6)
+            np.testing.assert_allclose(g[1], gr[1], rtol=1e-4, atol=1e-6)
+            assert np.all(np.isfinite(np.asarray(g[0])))
+            assert np.all(np.isfinite(np.asarray(g[1])))
+    print("dp4 tp2 ok")
+    """)
+
+
+def test_distributed_sce_bucket_larger_than_catalog_slice():
+    """Regression for the exact-mode candidate clip: with
+    bucket_size_y > C/m, stage 1 must clip per catalog SLICE and stage 2
+    per full catalog, matching the oracle's min(b_y, C) clip."""
+    _run("""
+    from repro.core.distributed_sce import sce_loss_sharded, sce_loss_sharded_ref
+    from repro.core.sce import SCEConfig
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 32))
+    y = jax.random.normal(jax.random.PRNGKey(2), (256, 32)) * 0.5
+    t = jax.random.randint(jax.random.PRNGKey(3), (128,), 0, 256)
+    # C/m = 64 on mesh24 — both a mid case (128) and the full catalog (384>C)
+    for b_y in (128, 384):
+        cfg = SCEConfig(8, 16, b_y, use_mix=True)
+        for mode in ("exact", "union"):
+            with set_mesh(mesh24):
+                l = jax.jit(lambda x, y: sce_loss_sharded(
+                    x, y, t, key=key, cfg=cfg, mesh=mesh24, mode=mode))(x, y)
+            lr = sce_loss_sharded_ref(x, y, t, key=key, cfg=cfg,
+                                      dp_size=2, mode=mode, tp_size=4)
+            np.testing.assert_allclose(l, lr, rtol=1e-5)
+    print("clip ok")
     """)
 
 
@@ -79,7 +141,7 @@ def test_distributed_sce_multipod_mesh():
     y = jax.random.normal(jax.random.PRNGKey(2), (256, 32)) * 0.5
     t = jax.random.randint(jax.random.PRNGKey(3), (128,), 0, 256)
     cfg = SCEConfig(8, 16, 32, use_mix=True)
-    with jax.set_mesh(mesh222):
+    with set_mesh(mesh222):
         l = jax.jit(lambda x, y: sce_loss_sharded(
             x, y, t, key=key, cfg=cfg, mesh=mesh222))(x, y)
     # pod×data = 4 data shards on the multi-pod mesh
@@ -94,16 +156,22 @@ def test_distributed_topk_exact():
     from repro.dist.collectives import distributed_topk
     scores = jax.random.normal(jax.random.PRNGKey(0), (5, 64))
     def inner(s):
-        vals, idx, _ = distributed_topk(s, 7, "model")
-        return vals, idx
-    fn = jax.shard_map(inner, mesh=mesh24,
-                       in_specs=P(None, "model"),
-                       out_specs=(P(None), P(None)))
-    with jax.set_mesh(mesh24):
-        vals, idx = fn(scores)
+        vals, idx, src = distributed_topk(s, 7, "model")
+        return vals, idx, src
+    fn = shard_map(inner, mesh=mesh24,
+                   in_specs=P(None, "model"),
+                   out_specs=(P(None), P(None), P(None)))
+    with set_mesh(mesh24):
+        vals, idx, src = fn(scores)
     want_vals, want_idx = jax.lax.top_k(scores, 7)
     np.testing.assert_allclose(np.asarray(vals)[:, :7], want_vals, rtol=1e-6)
     np.testing.assert_array_equal(np.asarray(idx)[:, :7], want_idx)
+    np.testing.assert_array_equal(np.asarray(src), np.asarray(idx) // 16)
+    # single-device fallback outside shard_map: plain top_k
+    fv, fi, fs = distributed_topk(scores, 7, "model")
+    np.testing.assert_allclose(np.asarray(fv), want_vals, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(fi), want_idx)
+    assert int(np.asarray(fs).max()) == 0
     print("topk ok")
     """)
 
@@ -120,7 +188,7 @@ def test_seqrec_serve_and_retrieval_match_dense():
     tokens = jax.random.randint(jax.random.PRNGKey(1), (8, cfg.max_len),
                                 1, cfg.n_items)
     serve = steps_lib.make_seqrec_serve_step(arch, cfg, mesh24, top_k=10)
-    with jax.set_mesh(mesh24):
+    with set_mesh(mesh24):
         vals, ids = jax.jit(serve)(params, tokens)
     # dense reference
     hidden = sasrec.forward(params, cfg, tokens)
@@ -131,7 +199,7 @@ def test_seqrec_serve_and_retrieval_match_dense():
 
     retr = steps_lib.make_seqrec_retrieval_step(arch, cfg, mesh24, top_k=10)
     cands = jnp.arange(1, 400)
-    with jax.set_mesh(mesh24):
+    with set_mesh(mesh24):
         rv, ri = jax.jit(retr)(params, tokens[:1], cands)
     sc = hidden[:1, -1] @ sasrec.item_embeddings(params, cfg)[cands].T  # noqa
     wv, wi = jax.lax.top_k(sc, 10)
@@ -143,20 +211,28 @@ def test_seqrec_serve_and_retrieval_match_dense():
 def test_mini_dryrun_lower_compile_both_meshes():
     """A REAL train cell (reduced widths via smoke config machinery is not
     enough — use bert4rec full config with the small batch shape) must
-    lower AND compile on single-pod and multi-pod minis."""
+    lower AND compile on single-pod and multi-pod minis; the dist
+    collectives must self-report their exact-mode all_to_all payloads."""
     _run("""
     from repro.configs import get_arch
     from repro.configs.common import ShapeSpec
+    from repro.dist import collectives as coll_lib
     from repro.launch.cells import _seqrec_cell
     arch = get_arch("bert4rec")
     shape = ShapeSpec("train_batch", "train", {"batch": 32})
     for mesh in (mesh24, mesh222):
         cell = _seqrec_cell(arch, shape, mesh)
+        coll_lib.reset_payload_log()
         compiled = cell.lower().compile()
         mem = compiled.memory_analysis()
         assert mem.temp_size_in_bytes >= 0
         cost = compiled.cost_analysis()
-        assert (cost or {}).get("flops", 1) > 0
+        cost = cost[0] if isinstance(cost, list) else (cost or {})
+        assert cost.get("flops", 1) > 0
+        modeled = coll_lib.payload_summary()
+        # exact-mode SCE ships (value, id, row) triples via all_to_all
+        assert modeled["counts"].get("all-to-all", 0) >= 3, modeled
+        assert modeled["total_bytes"] > 0
     print("mini dryrun ok")
     """)
 
@@ -168,8 +244,8 @@ def test_collective_bytes_parser():
     from repro.launch.dryrun import collective_bytes
     def f(x):
         return jax.lax.psum(x, "model")
-    fn = jax.shard_map(f, mesh=mesh24, in_specs=P("model"), out_specs=P())
-    with jax.set_mesh(mesh24):
+    fn = shard_map(f, mesh=mesh24, in_specs=P("model"), out_specs=P())
+    with set_mesh(mesh24):
         lowered = jax.jit(fn).lower(jnp.ones((64,)))
     hlo = lowered.compile().as_text()
     out = collective_bytes(hlo, 8)

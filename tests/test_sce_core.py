@@ -202,3 +202,69 @@ def test_memory_model_matches_paper():
     assert sce_loss_memory_bytes(cfg) < full_ce_memory_bytes(
         128 * 200, 10**6
     ) / 100  # the paper's ~100× headline
+
+
+@hypothesis.given(
+    n_exp=st.integers(4, 20),  # N = 2^4 … 2^20 positions
+    alpha_x10=st.integers(5, 40),  # α ∈ [0.5, 4.0]
+    beta_x10=st.integers(2, 40),  # β ∈ [0.2, 4.0]
+)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_from_alpha_beta_properties(n_exp, alpha_x10, beta_x10):
+    """§4.2.1 parametrization invariants: n_b·b_x ≈ α²·N and
+    β ≈ n_b/b_x (up to integer rounding), with clipping at small N."""
+    n = 2**n_exp
+    alpha = alpha_x10 / 10.0
+    beta = beta_x10 / 10.0
+    c = 10_000
+    cfg = SCEConfig.from_alpha_beta(n, c, alpha=alpha, beta=beta)
+
+    assert 1 <= cfg.bucket_size_x <= n  # clipped to the position count
+    assert 1 <= cfg.bucket_size_y <= c
+    # Ideal (pre-rounding) values; every clip/round moves each factor by
+    # at most max(1, the clip itself), so compare within rounding slack.
+    ideal_nb = alpha * (n * beta) ** 0.5
+    ideal_bx = min(alpha * (n / beta) ** 0.5, n)
+    assert abs(cfg.n_buckets - ideal_nb) <= max(1.0, 0.5 + 1e-9 * ideal_nb)
+    assert abs(cfg.bucket_size_x - ideal_bx) <= max(1.0, 0.5)
+    if cfg.bucket_size_x < n and min(ideal_nb, ideal_bx) >= 8:
+        # away from the clip/rounding floor both identities hold to ~25%
+        prod = cfg.n_buckets * cfg.bucket_size_x
+        assert 0.75 <= prod / (alpha**2 * n) <= 1.35
+        assert 0.75 <= (cfg.n_buckets / cfg.bucket_size_x) / beta <= 1.35
+
+
+def test_from_alpha_beta_clips_at_tiny_n():
+    """N=1 and tiny catalogs never produce degenerate (0-sized) buckets."""
+    cfg = SCEConfig.from_alpha_beta(1, 3, alpha=2.0, beta=1.0)
+    assert cfg.n_buckets >= 1
+    assert cfg.bucket_size_x == 1  # clipped to N
+    assert cfg.bucket_size_y == 3  # clipped to C
+
+
+@hypothesis.given(
+    n_exp=st.integers(6, 18),
+    c_exp=st.integers(8, 24),  # catalog 256 … 16M
+    b_y=st.integers(64, 1024),
+)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_memory_crossover_property(n_exp, c_exp, b_y):
+    """§3.1 memory model: SCE wins exactly when the catalog outgrows the
+    candidate budget — full/sce ≈ C / (α²·b_y), so the crossover sits at
+    C ≈ α²·b_y (checked with a 2× guard band for rounding)."""
+    from repro.core.sce import full_ce_memory_bytes, sce_loss_memory_bytes
+
+    n, c = 2**n_exp, 2**c_exp
+    alpha = 2.0
+    cfg = SCEConfig.from_alpha_beta(n, c, alpha=alpha, bucket_size_y=b_y)
+    if cfg.bucket_size_x >= n:  # fully clipped — ratio model breaks down
+        return
+    sce = sce_loss_memory_bytes(cfg)
+    full = full_ce_memory_bytes(n, c)
+    crossover = alpha**2 * min(b_y, c)
+    if c > 2 * crossover:
+        assert sce < full, (sce, full)
+        # and the savings scale like C/(α²·b_y), within rounding slop
+        assert full / sce > 0.4 * c / crossover
+    elif c < crossover / 2:
+        assert sce > full, (sce, full)

@@ -75,10 +75,11 @@ def test_checkpoint_elastic_resharding(tmp_path):
     """Restore with target shardings (the elastic-restart path)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.dist import make_mesh
+
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(1, {"w": jnp.arange(16.0)})
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     _, tree = mgr.restore_latest(
         shardings={"w": NamedSharding(mesh, P("data"))}
     )

@@ -17,8 +17,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.losses import loss_peak_elements, make_loss
-from repro.core.metrics import evaluate_seqrec
 from repro.core.sce import SCEConfig, sce_loss
+from repro.eval import (
+    dense_eval_elements,
+    eval_peak_elements,
+    evaluate_streaming,
+)
 from repro.data import Cursor, SeqDataConfig, SequenceDataset
 from repro.models import sasrec
 from repro.optim import make_optimizer
@@ -31,6 +35,10 @@ class RunResult:
     loss_peak_elements: int
     final_loss: float
     aux_history: Optional[list] = None
+    # eval-side memory model (paper Fig. 6 axes, extended to evaluation):
+    # streaming rank-and-topk peak vs the (B, C) materializing path
+    eval_peak_elements: int = 0
+    eval_dense_elements: int = 0
 
 
 def make_sasrec_loss_fn(loss_name: str, sce_cfg=None, **loss_kwargs):
@@ -107,12 +115,16 @@ def train_sasrec(
         final_loss = float(loss)
     train_time = time.time() - t0
 
-    # Held-out users (disjoint cursor stream, paper's temporal-split idea).
+    # Held-out users (disjoint cursor stream, paper's temporal-split
+    # idea), scored through the streaming eval path — the unsampled
+    # metrics no longer cost a (B_eval, C) score matrix.
     eval_data = SequenceDataset(SeqDataConfig(
         n_items=n_items, seq_len=seq_len, batch_size=eval_users,
     ))
     eval_batch, _ = eval_data.eval_batch(Cursor(seed=seed))
-    metrics = evaluate_seqrec(params, cfg, eval_batch)
+    eval_block_c = min(512, n_items)
+    metrics = evaluate_streaming(params, cfg, eval_batch,
+                                 block_c=eval_block_c)
 
     num_negs = loss_kwargs.get("num_negatives", 0)
     peak = loss_peak_elements(
@@ -126,4 +138,8 @@ def train_sasrec(
         loss_peak_elements=peak,
         final_loss=final_loss,
         aux_history=aux_hist,
+        eval_peak_elements=eval_peak_elements(
+            eval_users, 10, eval_block_c
+        ),
+        eval_dense_elements=dense_eval_elements(eval_users, n_items),
     )

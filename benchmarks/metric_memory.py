@@ -1,8 +1,20 @@
 """Paper Fig. 6 + Table 3 — the metric-memory-time trade-off: train
 SASRec with each loss (CE, BCE⁺, gBCE, CE⁻, SCE) under the same budget
 and compare unsampled NDCG/HR/COV, loss-memory and wall time.
+
+Extended with the eval-side memory axes: every row also reports the
+streaming-eval peak elements (``repro.eval``, ``O(B·(K + block))``)
+next to the ``(B, C)`` elements the old materializing eval path cost —
+the same argument as the loss columns, applied to evaluation.
+
+CLI: ``--steps N`` for smoke runs (CI uses ``--steps 5``), ``--json
+PATH`` to dump the rows as a machine-readable artifact so ``BENCH_*``
+trajectories accumulate across commits.
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 from benchmarks.harness import train_sasrec
 from repro.core.sce import SCEConfig
@@ -35,23 +47,41 @@ def run(steps: int = 150):
             "hr@10": res.metrics["hr@10"],
             "cov@10": res.metrics["cov@10"],
             "mem_elems": res.loss_peak_elements,
+            "eval_mem_elems": res.eval_peak_elements,
+            "eval_dense_elems": res.eval_dense_elements,
             "time_s": res.train_time_s,
         })
     by = {r["loss"]: r for r in rows}
+    sce = by["sce"]
     derived = (
-        f"sce_vs_ce mem={by['ce']['mem_elems']/by['sce']['mem_elems']:.0f}x "
-        f"ndcg_ratio={by['sce']['ndcg@10']/max(by['ce']['ndcg@10'],1e-9):.2f}"
+        f"sce_vs_ce mem={by['ce']['mem_elems']/sce['mem_elems']:.0f}x "
+        f"ndcg_ratio={sce['ndcg@10']/max(by['ce']['ndcg@10'],1e-9):.2f} "
+        f"eval_stream_vs_dense="
+        f"{sce['eval_dense_elems']/max(sce['eval_mem_elems'],1):.1f}x"
     )
     return rows, derived
 
 
 def main():
-    rows, derived = run()
-    print("loss,ndcg@10,hr@10,cov@10,mem_elems,time_s")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--json", help="write rows + derived summary to PATH")
+    args = ap.parse_args()
+    rows, derived = run(steps=args.steps)
+    print("loss,ndcg@10,hr@10,cov@10,mem_elems,eval_mem_elems,"
+          "eval_dense_elems,time_s")
     for r in rows:
         print(f"{r['loss']},{r['ndcg@10']:.4f},{r['hr@10']:.4f},"
-              f"{r['cov@10']:.4f},{r['mem_elems']},{r['time_s']:.1f}")
+              f"{r['cov@10']:.4f},{r['mem_elems']},{r['eval_mem_elems']},"
+              f"{r['eval_dense_elems']},{r['time_s']:.1f}")
     print(derived)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                {"steps": args.steps, "rows": rows, "derived": derived},
+                f, indent=2,
+            )
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -15,8 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
-from repro.core.metrics import evaluate_seqrec
 from repro.core.sce import SCEConfig, sce_loss
+from repro.eval import evaluate_streaming
 from repro.data import Cursor, SeqDataConfig, SequenceDataset
 from repro.models import sasrec
 from repro.optim import linear_warmup_cosine, make_optimizer
@@ -100,7 +100,8 @@ def main():
             print(f"step {step:4d}  sce-loss {float(loss):.4f}")
         if (step + 1) % args.eval_every == 0 or step == args.steps - 1:
             eb, _ = eval_data.eval_batch(Cursor(seed=0))
-            m = evaluate_seqrec(params, cfg, eb)
+            # streaming unsampled metrics — no (B, C) score matrix
+            m = evaluate_streaming(params, cfg, eb)
             print(f"  eval: NDCG@10 {m['ndcg@10']:.4f}  "
                   f"HR@10 {m['hr@10']:.4f}  COV@10 {m['cov@10']:.4f}")
             mgr.save(step, {

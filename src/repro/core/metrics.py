@@ -2,6 +2,11 @@
 
 Computed against FULL catalog scores (the paper follows Krichene &
 Rendle's critique of sampled metrics — no negative sampling at eval).
+
+This module MATERIALIZES the ``(B, C)`` score matrix — intentionally:
+it is the dense oracle that ``repro.eval`` (the streaming production
+path, peak ``O(B·(K + block))``) is pinned against in tests. Use
+``repro.eval.evaluate_streaming`` for anything at real catalog scale.
 """
 from __future__ import annotations
 
@@ -13,9 +18,22 @@ import numpy as np
 
 
 def rank_of_target(scores: jax.Array, targets: jax.Array) -> jax.Array:
-    """0-based rank of each target in its score row. scores: (B, C)."""
+    """0-based rank of each target in its score row. scores: (B, C).
+
+    Tie convention: PESSIMISTIC — every non-target score tied with the
+    target ranks above it, ``rank = #{s > t} + max(#{s == t} - 1, 0)``
+    (the ``- 1`` removes the target's own column). A strict ``>`` alone
+    hands all tied items the optimistic rank, which inflates HR/NDCG
+    exactly where ties are common (early training, low-precision
+    embeddings, degenerate/popular items); the pessimistic count is the
+    conservative bound and what ``repro.eval``'s streaming counters
+    reproduce. (The average convention — ties contribute half — would
+    make ranks non-integral; we document rather than implement it.)
+    """
     tgt_scores = jnp.take_along_axis(scores, targets[:, None], axis=1)
-    return jnp.sum(scores > tgt_scores, axis=1)
+    gt = jnp.sum(scores > tgt_scores, axis=1)
+    eq = jnp.sum(scores == tgt_scores, axis=1)
+    return gt + jnp.maximum(eq - 1, 0)
 
 
 def topk_metrics(
@@ -29,7 +47,10 @@ def topk_metrics(
                                       jnp.asarray(targets)))
     out: Dict[str, float] = {}
     c = catalog or scores.shape[1]
-    top = np.argsort(-scores, axis=1)
+    # stable descending argsort: equal scores keep ascending-id order —
+    # the lax.top_k tie rule the streaming path (repro.eval) guarantees,
+    # so COV@K seen-sets agree under exact score ties too
+    top = np.argsort(-scores, axis=1, kind="stable")
     for k in ks:
         hit = ranks < k
         out[f"hr@{k}"] = float(hit.mean())
@@ -43,7 +64,8 @@ def topk_metrics(
 def evaluate_seqrec(params, cfg, eval_batch, *, ks=(1, 5, 10)):
     """Leave-one-out evaluation of a SASRec-style model: feed the prefix,
     score the full catalog at the last real position, rank the held-out
-    next item."""
+    next item. Dense oracle — ``repro.eval.evaluate_streaming`` is the
+    equivalent production path (same protocol, no ``(B, C)`` matrix)."""
     from repro.models import sasrec
 
     tokens = np.asarray(eval_batch["tokens"])

@@ -36,6 +36,7 @@ from repro.dist.compat import AxisType, make_mesh, set_mesh, shard_map
 from repro.dist.collectives import (
     all_to_all_bucket_shuffle,
     distributed_topk,
+    distributed_topk_from_local,
     payload_log,
     payload_summary,
     reset_payload_log,
@@ -67,6 +68,7 @@ __all__ = [
     "catalog_spec",
     "data_axes",
     "distributed_topk",
+    "distributed_topk_from_local",
     "lm_logits_spec",
     "lm_tokens_spec",
     "make_mesh",

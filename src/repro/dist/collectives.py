@@ -11,7 +11,10 @@ performs (DESIGN.md §2/§4):
     score matrix: local top-k, one all-gather of the (m · k) candidate
     (value, global-id) pairs, local top-k over the union. The result is
     replicated over the axis, and ties resolve identically to a
-    single-device ``lax.top_k`` (lower global id wins).
+    single-device ``lax.top_k`` (lower global id wins). Its merge stage
+    is exposed as :func:`distributed_topk_from_local` for callers whose
+    local candidates come from a streaming scorer rather than a dense
+    local score matrix (``repro.eval``).
 
 Both degrade to a single-device fallback when called outside
 ``shard_map`` (no axis bound) so the same step code runs on one device.
@@ -89,17 +92,31 @@ def _axis_size(axis_name: str) -> Optional[int]:
 def all_to_all_bucket_shuffle(x: jax.Array, axis_name: str) -> jax.Array:
     """Route per-bucket candidate payloads to their owning model shard.
 
-    ``x``: ``(n_b, ...)`` — this shard's payload for ALL ``n_b`` buckets
-    (e.g. local top-k values, ids, or gathered embedding rows). Buckets
-    are owned contiguously: shard ``j`` owns buckets
-    ``[j·n_b/m, (j+1)·n_b/m)``.
+    The ONE all_to_all of exact-mode distributed MIPS (DESIGN.md §4):
+    payload is 1/m of the equivalent all-gather. Buckets are owned
+    contiguously: shard ``j`` owns buckets ``[j·n_b/m, (j+1)·n_b/m)``.
 
-    Returns ``(m, n_b/m, ...)`` where ``out[i]`` is shard ``i``'s payload
-    for this shard's owned buckets. Differentiable (the transpose of an
-    all_to_all is the inverse all_to_all), so exact-mode candidate
-    embeddings carry gradients back to their home shard.
+    Parameters
+    ----------
+    x : (n_b, ...) array
+        This shard's payload for ALL ``n_b`` buckets — e.g. local top-k
+        values ``(n_b, k)``, ids, or gathered embedding rows
+        ``(n_b, k, d)``. ``n_b`` must divide the axis size ``m``.
+    axis_name : str
+        Mesh axis to shuffle over (``"model"`` in this stack).
 
-    Single-device fallback (no bound axis): ``reshape`` to ``(1, n_b, ...)``.
+    Returns
+    -------
+    (m, n_b/m, ...) array
+        ``out[i]`` is shard ``i``'s payload for this shard's owned
+        buckets. Differentiable (the transpose of an all_to_all is the
+        inverse all_to_all), so exact-mode candidate embeddings carry
+        gradients back to their home shard.
+
+    Notes
+    -----
+    Single-device fallback (no bound axis): ``reshape`` to
+    ``(1, n_b, ...)`` — the same rank/layout as the m=1 collective.
     """
     m = _axis_size(axis_name)
     if m is None:
@@ -111,25 +128,97 @@ def all_to_all_bucket_shuffle(x: jax.Array, axis_name: str) -> jax.Array:
     return jax.lax.all_to_all(xs, axis_name, split_axis=0, concat_axis=0)
 
 
+def distributed_topk_from_local(
+    vals_l: jax.Array,
+    gids_l: jax.Array,
+    k: int,
+    axis_name: str,
+) -> Tuple[jax.Array, jax.Array]:
+    """Merge per-shard top-k candidates into the exact global top-k —
+    stage 2 of :func:`distributed_topk`, exposed for callers that
+    produce their local candidates WITHOUT a dense local score matrix
+    (e.g. ``repro.eval``'s streaming rank-and-topk, which only ever
+    holds ``(B, k_local)`` accumulators per shard).
+
+    Parameters
+    ----------
+    vals_l : (..., k_local) array
+        This shard's local top candidates, sorted descending, value
+        ties in ascending-global-id order (what ``lax.top_k`` and the
+        streaming kernels both produce). Required for exact tie parity
+        with a dense single-device ``lax.top_k``.
+    gids_l : (..., k_local) int array
+        Matching GLOBAL catalog ids.
+    k : int
+        Global candidates to keep; clamped to ``m · k_local``.
+    axis_name : str
+        Mesh axis the catalog is sharded over.
+
+    Returns
+    -------
+    (values, global_ids) : each ``(..., min(k, m·k_local))``
+        Replicated over ``axis_name`` (stage 2 runs identically on
+        every shard). Candidates union in ascending shard order and
+        ``lax.top_k`` breaks ties toward earlier positions ⇒ lower
+        global id — the dense tie rule, provided shard ``i`` only owns
+        ids below shard ``i+1``'s.
+
+    Notes
+    -----
+    Single-device fallback (no bound axis): top-k over the given
+    candidates as-is.
+    """
+    m = _axis_size(axis_name)
+    k_local = vals_l.shape[-1]
+    if m is None:
+        kk = min(k, k_local)
+        vals, sel = jax.lax.top_k(vals_l, kk)
+        return vals, jnp.take_along_axis(gids_l, sel, axis=-1)
+
+    _record("all-gather", axis_name, (m,) + vals_l.shape, vals_l.dtype, m)
+    _record("all-gather", axis_name, (m,) + gids_l.shape, gids_l.dtype, m)
+    vals_g = jax.lax.all_gather(vals_l, axis_name, axis=0)  # (m, ..., k_l)
+    gids_g = jax.lax.all_gather(gids_l, axis_name, axis=0)
+
+    union_shape = vals_l.shape[:-1] + (m * k_local,)
+    vals_u = jnp.moveaxis(vals_g, 0, -2).reshape(union_shape)
+    gids_u = jnp.moveaxis(gids_g, 0, -2).reshape(union_shape)
+
+    kk = min(k, m * k_local)
+    vals, sel = jax.lax.top_k(vals_u, kk)
+    gids = jnp.take_along_axis(gids_u, sel, axis=-1)
+    return vals, gids
+
+
 def distributed_topk(
     scores: jax.Array, k: int, axis_name: str
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Exact global top-k over the last (``axis_name``-sharded) dim.
 
-    ``scores``: ``(..., C_local)`` — each shard's slice of a row-sharded
-    score matrix whose global column ``c`` lives on shard ``c // C_local``.
+    Parameters
+    ----------
+    scores : (..., C_local) array
+        Each shard's slice of a row-sharded score matrix whose global
+        column ``c`` lives on shard ``c // C_local``.
+    k : int
+        Items to keep (clamped to the global column count).
+    axis_name : str
+        Mesh axis the columns are sharded over.
 
-    Two stages: (1) local top-``min(k, C_local)``; (2) one all-gather of
-    the ``(m · k_local)`` candidate (value, global-id) pairs and a local
-    top-k over the union. Stage 2 runs identically on every shard, so the
-    result is replicated over ``axis_name``. Selection (including tie
-    order) matches single-device ``lax.top_k`` on the concatenated
-    scores: candidates are unioned in ascending shard order, and
-    ``lax.top_k`` breaks value ties toward earlier positions ⇒ lower
-    global id, exactly the dense tie rule.
+    Returns
+    -------
+    (values, global_ids, source_shard) : each ``(..., k)``
+        Replicated over ``axis_name``.
 
-    Returns ``(values, global_ids, source_shard)``, each ``(..., k)``
-    (``k`` is clamped to the global column count).
+    Notes
+    -----
+    Two stages: (1) local top-``min(k, C_local)``; (2) one all-gather
+    of the ``(m · k_local)`` candidate (value, global-id) pairs and a
+    local top-k over the union
+    (:func:`distributed_topk_from_local`). Selection — including tie
+    order — matches single-device ``lax.top_k`` on the concatenated
+    scores: candidates union in ascending shard order and value ties
+    break toward the lower global id, exactly the dense rule.
 
     Single-device fallback: plain ``lax.top_k`` with zero source shards.
     """
@@ -144,16 +233,5 @@ def distributed_topk(
     vals_l, idx_l = jax.lax.top_k(scores, k_local)
     gids_l = idx_l + shard * c_local
 
-    _record("all-gather", axis_name, (m,) + vals_l.shape, vals_l.dtype, m)
-    _record("all-gather", axis_name, (m,) + gids_l.shape, gids_l.dtype, m)
-    vals_g = jax.lax.all_gather(vals_l, axis_name, axis=0)  # (m, ..., k_l)
-    gids_g = jax.lax.all_gather(gids_l, axis_name, axis=0)
-
-    union_shape = scores.shape[:-1] + (m * k_local,)
-    vals_u = jnp.moveaxis(vals_g, 0, -2).reshape(union_shape)
-    gids_u = jnp.moveaxis(gids_g, 0, -2).reshape(union_shape)
-
-    kk = min(k, m * k_local)
-    vals, sel = jax.lax.top_k(vals_u, kk)
-    gids = jnp.take_along_axis(gids_u, sel, axis=-1)
+    vals, gids = distributed_topk_from_local(vals_l, gids_l, k, axis_name)
     return vals, gids, gids // c_local

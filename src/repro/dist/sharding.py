@@ -37,8 +37,17 @@ DATA_AXES = ("pod", "data")  # outer-to-inner data-parallel axes
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     """The data-parallel axes present on ``mesh``, outermost first.
 
-    Returned as a tuple so it can be used directly as ONE entry of a
-    ``PartitionSpec`` (sharding a single tensor dim over pod×data).
+    Parameters
+    ----------
+    mesh : Mesh
+        Any mesh built from the ``("pod", "data", "model")`` vocabulary.
+
+    Returns
+    -------
+    tuple of str
+        Subset of ``("pod", "data")`` present on ``mesh`` — returned as
+        a tuple so it can be used directly as ONE entry of a
+        ``PartitionSpec`` (sharding a single tensor dim over pod×data).
     """
     return tuple(ax for ax in DATA_AXES if ax in mesh.axis_names)
 
@@ -64,32 +73,90 @@ def _fit(mesh: Mesh, dim: Optional[int], axes):
 # Generic specs
 # ---------------------------------------------------------------------------
 def replicated_spec() -> P:
-    """Fully-replicated spec (any rank — trailing dims default to None)."""
+    """Fully-replicated spec.
+
+    Returns
+    -------
+    PartitionSpec
+        ``P()`` — valid for any rank (trailing dims default to None).
+    """
     return P()
 
 
 def replicated_specs(tree) -> Any:
-    """A spec tree of ``P()`` mirroring ``tree`` (small replicated params,
-    e.g. the GNN family)."""
+    """A spec tree of ``P()`` mirroring ``tree``.
+
+    Parameters
+    ----------
+    tree : pytree
+        Any parameter pytree (small replicated params, e.g. the GNN
+        family).
+
+    Returns
+    -------
+    pytree of PartitionSpec
+        Same structure, every leaf ``P()``.
+    """
     return jax.tree.map(lambda _: P(), tree)
 
 
 def batch_spec(mesh: Mesh, ndim: int = 1, *, batch_dim: int = 0) -> P:
-    """Batch-leading layout: dim ``batch_dim`` over the data axes, rest
-    replicated — tokens/targets/labels and per-example outputs."""
+    """Batch-leading layout — tokens/targets/labels, per-example outputs.
+
+    Parameters
+    ----------
+    mesh : Mesh
+    ndim : int
+        Rank of the tensor the spec describes.
+    batch_dim : int
+        Which dim is the batch dim (default 0).
+
+    Returns
+    -------
+    PartitionSpec
+        Dim ``batch_dim`` sharded over the data axes (pod×data), every
+        other dim replicated.
+    """
     dims: list = [None] * ndim
     dims[batch_dim] = data_axes(mesh)
     return P(*dims)
 
 
 def catalog_spec(mesh: Mesh, ndim: int = 2) -> P:
-    """Vocab-parallel layout: rows over ``model`` — the catalog/vocab
-    table slices ``Y`` that the SCE losses and serve steps consume."""
+    """Vocab-parallel catalog layout.
+
+    Parameters
+    ----------
+    mesh : Mesh
+    ndim : int
+        Rank of the table (2 for the ``(C, d)`` embedding table).
+
+    Returns
+    -------
+    PartitionSpec
+        Rows over ``model``, trailing dims replicated — the catalog /
+        vocab table slices ``Y`` that the SCE losses, the serve top-k
+        and the streaming eval (``repro.eval``) all consume, so
+        training, serving and evaluation never reshard the catalog.
+    """
     return P(MODEL_AXIS, *([None] * (ndim - 1)))
 
 
 def named_sharding_tree(mesh: Mesh, spec_tree) -> Any:
-    """Zip a spec tree into a ``NamedSharding`` tree on ``mesh``."""
+    """Zip a spec tree into a ``NamedSharding`` tree on ``mesh``.
+
+    Parameters
+    ----------
+    mesh : Mesh
+    spec_tree : pytree of PartitionSpec
+        Usually the output of one of the ``*_specs`` builders; the tree
+        mirrors the parameter pytree 1:1.
+
+    Returns
+    -------
+    pytree of NamedSharding
+        Same structure; pass directly as ``jit`` in/out shardings.
+    """
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s),
         spec_tree,
@@ -114,6 +181,13 @@ def residual_act_spec(mesh: Mesh, *, seq_parallel: bool = False):
 
 
 def lm_tokens_spec(mesh: Mesh, *, seq_parallel: bool = False) -> P:
+    """(B, S) token batches: batch over the data axes; with sequence
+    parallelism S additionally shards over ``model``.
+
+    Returns
+    -------
+    PartitionSpec for a rank-2 token tensor.
+    """
     return (
         P(data_axes(mesh), MODEL_AXIS)
         if seq_parallel
@@ -237,11 +311,27 @@ def transformer_cache_specs(
 def seqrec_param_specs(cfg, mesh: Mesh) -> Dict[str, Any]:
     """Spec tree mirroring ``models.sasrec.init_params``.
 
+    Parameters
+    ----------
+    cfg : SeqRecConfig
+        Supplies ``n_rows`` (padded catalog rows), ``d_model``,
+        ``d_ff_actual``.
+    mesh : Mesh
+
+    Returns
+    -------
+    dict
+        PartitionSpec tree with the structure of the SASRec/BERT4Rec
+        param dict.
+
+    Notes
+    -----
     The item-embedding table is the model: its rows (catalog) shard over
-    ``model`` — the same vocab-parallel layout the SCE loss and the serve
-    top-k consume, so training and serving never reshard the catalog.
-    Encoder blocks follow Megatron: qkv/w1 column-parallel, wo/w2
-    row-parallel; biases follow their matmul's output dim.
+    ``model`` — the same vocab-parallel layout the SCE loss, the serve
+    top-k and the streaming eval consume, so training, serving and
+    evaluation never reshard the catalog. Encoder blocks follow
+    Megatron: qkv/w1 column-parallel, wo/w2 row-parallel; biases follow
+    their matmul's output dim.
     """
     d = cfg.d_model
     ff = cfg.d_ff_actual
@@ -366,12 +456,29 @@ def opt_state_specs(
     optimizer_name: str, params_abs, param_specs, opt_state_abs
 ) -> Any:
     """Spec tree for an (abstract) optimizer state, mirroring the param
-    specs through it: adamw/sgd moments inherit their param's spec;
-    adafactor row/col stats inherit the matching reduced spec; the
-    error-feedback wrapper's residual mirrors the gradients; wrapper
-    containers (e.g. ``inner["base"]`` holding the base optimizer's
-    moment dict) recurse. ``optimizer_name`` is advisory (the walk is
-    structure-driven) and kept so call sites state intent.
+    specs through it.
+
+    Parameters
+    ----------
+    optimizer_name : str
+        Advisory only (the walk is structure-driven); kept so call
+        sites state intent.
+    params_abs : pytree of ShapeDtypeStruct
+        Abstract params the state was built for.
+    param_specs : pytree of PartitionSpec
+        Output of the matching ``*_param_specs`` builder.
+    opt_state_abs : pytree
+        Abstract optimizer state (``jax.eval_shape`` of ``opt_init``).
+
+    Returns
+    -------
+    pytree of PartitionSpec
+        Same structure as ``opt_state_abs``: adamw/sgd moments inherit
+        their param's spec; adafactor row/col stats inherit the
+        matching reduced spec (``vr``/``vc`` keys disambiguate square
+        matrices); the error-feedback wrapper's residual mirrors the
+        gradients; wrapper containers (e.g. ``inner["base"]``) recurse;
+        scalars replicate.
     """
     del optimizer_name
 

@@ -1,0 +1,46 @@
+"""``repro.eval`` — streaming full-catalog evaluation (DESIGN.md §Eval).
+
+Unsampled HR@K / NDCG@K / COV@K and target ranks computed without ever
+materializing the ``(B, C)`` score matrix — the evaluation-side
+extension of the paper's peak-memory argument (its §4.1.2 metrics follow
+Krichene & Rendle's critique of sampled evaluation, so the catalog can't
+be subsampled; it has to be *streamed*).
+
+Layers:
+  ``kernels/eval_topk.py`` — Pallas streaming rank-and-topk (+ the
+      bitwise-consistent target-score extractor); chunked pure-jnp
+      reference in ``kernels/ref.py``.
+  ``streaming``            — scorer front-end + incremental metric
+      accumulators + the analytic eval-memory model.
+  ``harness``              — leave-one-out driver (``score_fn``
+      protocol over SASRec / BERT4Rec), single-device or sharded
+      (catalog over ``model``, batch over the data axes).
+
+``core.metrics`` (dense ``(B, C)`` scoring) remains in place as the
+oracle the equality tests pin this package against.
+"""
+from repro.eval.harness import (
+    bert4rec_score_fn,
+    default_score_fn,
+    evaluate_streaming,
+    sasrec_score_fn,
+)
+from repro.eval.streaming import (
+    MetricAccumulator,
+    dense_eval_elements,
+    eval_peak_elements,
+    ranks_from_counts,
+    streaming_rank_topk,
+)
+
+__all__ = [
+    "MetricAccumulator",
+    "bert4rec_score_fn",
+    "default_score_fn",
+    "dense_eval_elements",
+    "eval_peak_elements",
+    "evaluate_streaming",
+    "ranks_from_counts",
+    "sasrec_score_fn",
+    "streaming_rank_topk",
+]

@@ -1,0 +1,237 @@
+"""Leave-one-out streaming evaluation driver (DESIGN.md §Eval).
+
+Replaces ``core.metrics.evaluate_seqrec`` as the production eval path:
+same leave-one-out protocol, same unsampled metrics, but scored through
+``repro.eval.streaming`` so no ``(B, C)`` score matrix ever exists —
+``core.metrics`` stays as the dense oracle the tests compare against.
+
+Model-agnosticism is a ``score_fn`` protocol::
+
+    score_fn(params, tokens) -> (states, catalog)
+
+where ``tokens`` are the kept right-aligned eval sequences (the held-out
+target still in the last column), ``states`` is the ``(B, d)`` user
+representation at the scoring position and ``catalog`` the shard-even
+``(C_pad, d)`` item table slice (``loss_catalog`` — phantom rows are
+masked by id range, so eval shards the catalog exactly like the loss
+does). ``sasrec_score_fn`` hides the target and re-right-aligns;
+``bert4rec_score_fn`` replaces it with [MASK] (the Cloze eval protocol).
+
+Sharded path: with a ``mesh``, scoring runs under ``shard_map`` — batch
+rows over the data axes, catalog rows over ``model``
+(``dist.sharding.catalog_spec``) — each model shard streams its slice
+(chunked reference; interpret-mode Pallas cannot run under shard_map,
+see ``kernels/ops.py``), target scores and rank counts ``psum`` across
+``model``, and per-shard top-k candidates merge through
+``dist.collectives.distributed_topk_from_local``. Per-device peak stays
+``O(B_local·(K + block))``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import set_mesh, shard_map
+from repro.dist.collectives import distributed_topk_from_local
+from repro.dist.sharding import batch_spec, catalog_spec, data_axes
+from repro.eval.streaming import (
+    MetricAccumulator,
+    ranks_from_counts,
+    streaming_rank_topk,
+)
+from repro.kernels import ops
+
+ScoreFn = Callable[..., Tuple[jax.Array, jax.Array]]
+
+
+# ---------------------------------------------------------------------------
+# score_fn implementations
+# ---------------------------------------------------------------------------
+def sasrec_score_fn(cfg) -> ScoreFn:
+    """Causal leave-one-out: hide the last real item, re-right-align,
+    encode, take the last position's hidden state."""
+    from repro.models import sasrec
+
+    def fn(params, tokens):
+        last = tokens.shape[1] - 1
+        prefix = tokens.at[:, last].set(0)
+        prefix = jnp.roll(prefix, 1, axis=1)  # keep right alignment
+        prefix = prefix.at[:, 0].set(0)
+        hidden = sasrec.forward(params, cfg, prefix)
+        return hidden[:, -1], sasrec.loss_catalog(params, cfg)
+
+    return fn
+
+
+def bert4rec_score_fn(cfg) -> ScoreFn:
+    """Cloze leave-one-out: replace the held-out item with [MASK] and
+    score that position (Sun et al. 2019 eval protocol)."""
+    from repro.models import bert4rec as b4r
+    from repro.models import sasrec
+
+    def fn(params, tokens):
+        last = tokens.shape[1] - 1
+        masked = tokens.at[:, last].set(b4r.mask_token_id(cfg))
+        hidden = b4r.forward(params, cfg, masked)
+        return hidden[:, -1], sasrec.loss_catalog(params, cfg)
+
+    return fn
+
+
+def default_score_fn(cfg) -> ScoreFn:
+    """SASRec for causal configs, BERT4Rec otherwise."""
+    return sasrec_score_fn(cfg) if cfg.causal else bert4rec_score_fn(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+def _keep_and_targets(tokens: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Filter sequences with ≥ 2 real items; the held-out target is the
+    last (right-aligned) position."""
+    lengths = (tokens != 0).sum(axis=1)
+    kept = tokens[lengths >= 2]
+    b, l = kept.shape
+    targets = kept[np.arange(b), l - 1].copy()
+    return kept, targets
+
+
+def evaluate_streaming(
+    params,
+    cfg,
+    eval_batch,
+    *,
+    ks: Sequence[int] = (1, 5, 10),
+    score_fn: Optional[ScoreFn] = None,
+    mesh=None,
+    block_b: int = 128,
+    block_c: int = 512,
+    impl: str = "auto",
+    interpret: bool | None = None,
+    accumulator: Optional[MetricAccumulator] = None,
+) -> Dict[str, float]:
+    """Leave-one-out evaluation without materializing ``(B, C)`` scores.
+
+    Parameters
+    ----------
+    params, cfg : model params + ``SeqRecConfig``.
+    eval_batch : dict with right-aligned ``"tokens"`` (B, L).
+    ks : metric cutoffs.
+    score_fn : the model protocol (default: by ``cfg.causal``).
+    mesh : optional — run the scoring under ``shard_map`` with the
+        catalog sharded over ``model`` and batch rows over the data
+        axes. The sharded path always streams through the chunked
+        reference (interpret-mode Pallas cannot run under shard_map —
+        see ``kernels/ops.py``), so ``impl``, ``interpret`` and
+        ``block_b`` apply to the single-device path only; ``block_c``
+        applies to both.
+    impl, interpret, block_b, block_c : scorer knobs
+        (see ``streaming_rank_topk``).
+    accumulator : fold into an existing ``MetricAccumulator`` (multi-
+        batch evaluation); a fresh one is used otherwise.
+
+    Returns
+    -------
+    dict — same keys (``hr@k`` / ``ndcg@k`` / ``cov@k``) and, on a
+    single batch, the same values as the ``core.metrics.topk_metrics``
+    oracle.
+    """
+    if score_fn is None:
+        score_fn = default_score_fn(cfg)
+    tokens, targets = _keep_and_targets(np.asarray(eval_batch["tokens"]))
+    k = max(ks)
+
+    if mesh is None:
+        states, catalog = score_fn(params, jnp.asarray(tokens))
+        vals, ids, gt, eq = streaming_rank_topk(
+            states, catalog, jnp.asarray(targets), k,
+            block_b=block_b, block_c=block_c,
+            c_lo=1, c_hi=cfg.n_items,
+            impl=impl, interpret=interpret,
+        )
+    else:
+        vals, ids, gt, eq = _evaluate_sharded(
+            params, cfg, tokens, targets, k,
+            score_fn=score_fn, mesh=mesh, block_c=block_c,
+        )
+
+    acc = accumulator or MetricAccumulator(ks, cfg.n_items)
+    acc.update(ranks_from_counts(gt, eq), np.asarray(ids))
+    return acc.result()
+
+
+# jitted sharded scorers, keyed on everything the closure bakes in —
+# periodic in-loop eval must NOT retrace/recompile every interval
+_SHARDED_FNS: Dict[tuple, Callable] = {}
+
+
+def _sharded_eval_fn(mesh, k, block_c, n_items):
+    cache_key = (mesh, k, block_c, n_items)
+    fn = _SHARDED_FNS.get(cache_key)
+    if fn is not None:
+        return fn
+
+    def inner(x_l, y_l, t_l):
+        c_local = y_l.shape[0]
+        offset = jax.lax.axis_index("model") * c_local
+        # target score from the shard that owns the row (others add 0)
+        tgt = jax.lax.psum(
+            ops.eval_tgt_scores(
+                x_l, y_l, t_l, block_c=block_c, id_offset=offset
+            ),
+            "model",
+        )
+        vals_l, ids_l, gt_l, eq_l = ops.eval_topk(
+            x_l, y_l, tgt, k,
+            block_c=block_c, c_lo=1, c_hi=n_items, id_offset=offset,
+        )
+        gt = jax.lax.psum(gt_l, "model")
+        eq = jax.lax.psum(eq_l, "model")
+        vals, gids = distributed_topk_from_local(vals_l, ids_l, k, "model")
+        return vals, gids, gt, eq
+
+    fn = jax.jit(shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(
+            batch_spec(mesh, 2),
+            catalog_spec(mesh),
+            batch_spec(mesh, 1),
+        ),
+        out_specs=(
+            batch_spec(mesh, 2),
+            batch_spec(mesh, 2),
+            batch_spec(mesh, 1),
+            batch_spec(mesh, 1),
+        ),
+    ))
+    _SHARDED_FNS[cache_key] = fn
+    return fn
+
+
+def _evaluate_sharded(
+    params, cfg, tokens, targets, k, *, score_fn, mesh, block_c
+):
+    """shard_map scoring: per-model-shard streaming over the local
+    catalog slice, psum'd rank counts, two-stage top-k merge."""
+    dp = math.prod(mesh.shape[ax] for ax in data_axes(mesh)) or 1
+    b = tokens.shape[0]
+    pad = (-b) % dp
+    if pad:
+        # padded rows: repeat the last sequence; dropped after scoring
+        tokens = np.concatenate([tokens, tokens[-1:].repeat(pad, 0)])
+        targets = np.concatenate([targets, targets[-1:].repeat(pad, 0)])
+
+    states, catalog = score_fn(params, jnp.asarray(tokens))
+    fn = _sharded_eval_fn(mesh, k, block_c, cfg.n_items)
+    with set_mesh(mesh):
+        vals, ids, gt, eq = fn(
+            states, catalog, jnp.asarray(targets, jnp.int32)
+        )
+    if pad:
+        return vals[:b], ids[:b], gt[:b], eq[:b]
+    return vals, ids, gt, eq

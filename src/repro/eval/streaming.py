@@ -1,0 +1,196 @@
+"""Streaming scorer + incremental metric accumulators (DESIGN.md §Eval).
+
+The unsampled metrics the paper reports (HR@K / NDCG@K / COV@K, §4.1.2)
+are functions of two small per-user quantities — the target's rank among
+all catalog scores and the top-``K`` recommended ids — NOT of the scores
+themselves. This module computes exactly those quantities with peak live
+memory ``O(B·(K + block))`` and folds them into running metric sums, so
+evaluation never materializes the ``(B, C)`` score matrix the old
+``core.metrics.evaluate_seqrec`` path built (the eval-side twin of the
+paper's loss-memory argument; RECE makes the same move on the loss side
+by chunking).
+
+Two interchangeable scorer implementations (same outputs, same tie
+rule):
+
+  * ``impl="kernel"`` — the Pallas ``kernels/eval_topk.py`` pair
+    (Mosaic on TPU; ``interpret=True`` elsewhere — bit-accurate but
+    slow, for validation);
+  * ``impl="ref"``    — the jit-compiled chunked ``kernels/ref.py``
+    scan (the fast CPU path and the path used inside ``shard_map``).
+
+``impl="auto"`` picks the kernel on TPU and the reference elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# Streaming scorer
+# ---------------------------------------------------------------------------
+@functools.partial(
+    jax.jit, static_argnames=("k", "chunk", "c_lo", "c_hi", "id_offset")
+)
+def _ref_rank_topk(x, y, targets, *, k, chunk, c_lo, c_hi, id_offset):
+    tgt = ref.eval_tgt_scores_ref(
+        x, y, targets, chunk=chunk, id_offset=id_offset
+    )
+    return ref.eval_topk_ref(
+        x, y, tgt, k,
+        chunk=chunk, c_lo=c_lo, c_hi=c_hi, id_offset=id_offset,
+    )
+
+
+def streaming_rank_topk(
+    x,
+    y,
+    targets,
+    k: int,
+    *,
+    block_b: int = 128,
+    block_c: int = 512,
+    c_lo: int = 0,
+    c_hi: int | None = None,
+    id_offset: int = 0,
+    impl: str = "auto",
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Top-k ids/values + target rank counts without ``(B, C)`` scores.
+
+    Parameters
+    ----------
+    x : (B, d) user states.
+    y : (C, d) catalog table (or shard; see ``id_offset``).
+    targets : (B,) i32 global ids of the held-out items.
+    k : top-k size (``max(ks)`` of the metrics wanted).
+    block_b, block_c : tile sizes — peak live score elements are
+        ``B·(block_c + 2k)`` instead of ``B·C``.
+    c_lo, c_hi : valid global-id range (mask padding id 0 with
+        ``c_lo=1``, phantom padded rows with ``c_hi=n_items``).
+    impl : "kernel" | "ref" | "auto".
+
+    Returns
+    -------
+    (vals, ids, gt, eq) — see ``kernels.ops.eval_topk``. The target
+    score is extracted from the same streamed matmul (never a separate
+    gather-einsum), so ``gt``/``eq`` are bitwise-consistent with the
+    streamed scores — ``ranks_from_counts(gt, eq)`` reproduces the
+    dense oracle's ranks exactly.
+    """
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        c_hi_static = (
+            id_offset + y.shape[0] if c_hi is None else c_hi
+        )
+        return _ref_rank_topk(
+            x, y, targets,
+            k=k, chunk=block_c, c_lo=c_lo, c_hi=c_hi_static,
+            id_offset=id_offset,
+        )
+    tgt = ops.eval_tgt_scores(
+        x, y, targets,
+        block_b=block_b, block_c=block_c,
+        id_offset=id_offset, interpret=interpret,
+    )
+    return ops.eval_topk(
+        x, y, tgt, k,
+        block_b=block_b, block_c=block_c,
+        c_lo=c_lo, c_hi=c_hi, id_offset=id_offset, interpret=interpret,
+    )
+
+
+def ranks_from_counts(gt, eq):
+    """Pessimistic-tie rank from the streamed counts: ``gt`` scores beat
+    the target, ``eq`` equal it (including the target's own column) →
+    rank ``gt + max(eq - 1, 0)`` — the same convention as
+    ``core.metrics.rank_of_target``."""
+    gt = np.asarray(gt)
+    eq = np.asarray(eq)
+    return gt + np.maximum(eq - 1, 0)
+
+
+# ---------------------------------------------------------------------------
+# Incremental metric accumulators
+# ---------------------------------------------------------------------------
+class MetricAccumulator:
+    """Fold per-batch ``(ranks, topk_ids)`` into running HR/NDCG/COV sums.
+
+    The streaming generalization of ``core.metrics.topk_metrics``: on a
+    single batch the results are identical; across many batches HR/NDCG
+    average over all users and COV@K counts distinct recommended items
+    over the WHOLE evaluation run (a ``(C,)`` seen-mask per K — bytes,
+    not the per-batch ``(B, K)`` id matrix the one-shot path keeps).
+
+    Parameters
+    ----------
+    ks : cutoffs, e.g. ``(1, 5, 10)``.
+    catalog : COV denominator ``C`` (``cfg.n_items``).
+    """
+
+    def __init__(self, ks: Sequence[int], catalog: int):
+        self.ks = tuple(ks)
+        self.catalog = int(catalog)
+        self.n_users = 0
+        self._hit = {k: 0.0 for k in self.ks}
+        self._ndcg = {k: 0.0 for k in self.ks}
+        self._seen = {k: np.zeros(self.catalog, bool) for k in self.ks}
+
+    def update(self, ranks, topk_ids) -> None:
+        """Fold one batch.
+
+        Parameters
+        ----------
+        ranks : (B,) 0-based target ranks (``ranks_from_counts``).
+        topk_ids : (B, >= max(ks)) global recommended ids, best-first;
+            out-of-range ids (the ``INT32_MAX`` placeholder when
+            ``k`` exceeds the valid column count) are ignored for COV.
+        """
+        ranks = np.asarray(ranks)
+        topk_ids = np.asarray(topk_ids)
+        self.n_users += len(ranks)
+        for k in self.ks:
+            hit = ranks < k
+            self._hit[k] += float(hit.sum())
+            self._ndcg[k] += float(
+                np.where(hit, 1.0 / np.log2(ranks + 2.0), 0.0).sum()
+            )
+            ids = topk_ids[:, :k].ravel()
+            ids = ids[(ids >= 0) & (ids < self.catalog)]
+            self._seen[k][ids] = True
+
+    def result(self) -> Dict[str, float]:
+        """Metric dict in the exact key format of ``topk_metrics``."""
+        n = max(self.n_users, 1)
+        out: Dict[str, float] = {}
+        for k in self.ks:
+            out[f"hr@{k}"] = self._hit[k] / n
+            out[f"ndcg@{k}"] = self._ndcg[k] / n
+            out[f"cov@{k}"] = float(self._seen[k].sum()) / self.catalog
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic eval-memory model (the benchmark axes, mirroring
+# core.losses.loss_peak_elements on the loss side)
+# ---------------------------------------------------------------------------
+def eval_peak_elements(batch: int, k: int, block_c: int = 512) -> int:
+    """Peak live score-side elements of the streaming path: one
+    ``(B, block_c)`` score tile + the ``(B, k)`` value/id accumulators
+    + the ``(B,)`` count pair — ``O(B·(K + block))``, independent of
+    ``C``."""
+    return batch * (block_c + 2 * k + 2)
+
+
+def dense_eval_elements(batch: int, catalog: int) -> int:
+    """Score-side elements of the materializing path: the full
+    ``(B, C)`` matrix (plus its host argsort copy, not counted)."""
+    return batch * catalog

@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import eval_topk as _eval_topk
 from repro.kernels import fused_ce as _fused_ce
 from repro.kernels import ref as _ref
 from repro.kernels import sce_bucket as _sce_bucket
@@ -102,3 +103,64 @@ def fused_ce_loss(
     if interpret and _inside_shard_map(x, y):
         return _ref.fused_ce_loss_ref(x, y, targets)
     return _fused_ce.fused_ce_loss(x, y, targets, block_n, block_c, interpret)
+
+
+def eval_topk(
+    x,
+    y,
+    tgt_scores,
+    k: int,
+    *,
+    block_b: int = 128,
+    block_c: int = 512,
+    c_lo: int = 0,
+    c_hi: int | None = None,
+    id_offset: int = 0,
+    interpret: bool | None = None,
+):
+    """Streaming full-catalog top-k + target rank counts →
+    ``(vals (B,k), ids (B,k), gt (B,), eq (B,))``. See
+    kernels/eval_topk.py; inside ``shard_map`` (or with a traced
+    ``id_offset``) the chunked pure-jnp reference runs instead — same
+    outputs and tie rule."""
+    if interpret is None:
+        interpret = _interpret_default()
+    traced_offset = not isinstance(id_offset, int)
+    if traced_offset or (interpret and _inside_shard_map(x, y)):
+        return _ref.eval_topk_ref(
+            x, y, tgt_scores, k,
+            chunk=block_c, c_lo=c_lo, c_hi=c_hi, id_offset=id_offset,
+        )
+    return _eval_topk.eval_topk(
+        x, y, tgt_scores, k,
+        block_b=block_b, block_c=block_c,
+        c_lo=c_lo, c_hi=c_hi, id_offset=id_offset, interpret=interpret,
+    )
+
+
+def eval_tgt_scores(
+    x,
+    y,
+    targets,
+    *,
+    block_b: int = 128,
+    block_c: int = 512,
+    id_offset: int = 0,
+    interpret: bool | None = None,
+):
+    """Target-column scores from the same streamed tile matmul
+    ``eval_topk`` runs (call with the SAME ``block_c`` so the counts it
+    feeds are bitwise-exact). → (B,) f32. Same shard_map / traced-offset
+    fallback to the chunked reference as ``eval_topk``."""
+    if interpret is None:
+        interpret = _interpret_default()
+    traced_offset = not isinstance(id_offset, int)
+    if traced_offset or (interpret and _inside_shard_map(x, y)):
+        return _ref.eval_tgt_scores_ref(
+            x, y, targets, chunk=block_c, id_offset=id_offset
+        )
+    return _eval_topk.eval_tgt_scores(
+        x, y, targets,
+        block_b=block_b, block_c=block_c,
+        id_offset=id_offset, interpret=interpret,
+    )

@@ -53,6 +53,110 @@ def sce_bucket_plse_ref(
     return m + jnp.log(jnp.maximum(s, 1e-30))
 
 
+def eval_topk_ref(
+    x: jax.Array,  # (B, d)
+    y: jax.Array,  # (C, d) catalog (or a catalog shard)
+    tgt_scores: jax.Array,  # (B,) f32 target score per row
+    k: int,
+    *,
+    chunk: int = 512,
+    c_lo: int = 0,
+    c_hi=None,
+    id_offset=0,
+):
+    """Chunked streaming top-k + rank counts — pure-jnp reference for
+    ``kernels/eval_topk.py`` (and the path used inside ``shard_map``,
+    where interpret-mode Pallas cannot run — see ``kernels/ops.py``).
+
+    ``lax.scan`` over ``(chunk, d)`` catalog slices carrying only
+    ``(topk_vals, topk_ids, gt, eq)``; peak live elements are
+    ``O(B·(k + chunk))`` rather than ``O(B·C)``. Columns with global id
+    outside ``[c_lo, c_hi)`` are masked (padding / phantom rows);
+    ``id_offset`` (may be traced, e.g. ``shard * C_local``) maps local
+    rows of ``y`` to global catalog ids. Same outputs and tie rule as
+    the kernel: ties resolve toward the lower global id because each
+    chunk merge concatenates the (id-ascending) running buffer before
+    the new (id-ascending) columns and ``lax.top_k`` is stable.
+    """
+    b, _ = x.shape
+    c = y.shape[0]
+    if c_hi is None:
+        c_hi = id_offset + c
+    chunk = min(chunk, c)
+    pad = (-c) % chunk
+    yp = jnp.pad(y, ((0, pad), (0, 0)))
+    n_chunks = (c + pad) // chunk
+    f32 = jnp.float32
+    x32 = x.astype(f32)
+    tgt = tgt_scores.astype(f32)[:, None]
+
+    vals0 = jnp.full((b, k), NEG_INF, f32)
+    ids0 = jnp.full((b, k), jnp.iinfo(jnp.int32).max, jnp.int32)
+    cnt0 = jnp.zeros((b,), jnp.int32)
+
+    def body(carry, jc):
+        vals, ids, gt, eq = carry
+        rows = jax.lax.dynamic_slice_in_dim(yp, jc * chunk, chunk, 0)
+        s = x32 @ rows.astype(f32).T  # (b, chunk)
+        idx = jc * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        col = jnp.broadcast_to((id_offset + idx)[None, :], s.shape)
+        # padded-tail rows (idx ≥ C) masked explicitly — their global ids
+        # may alias the next catalog shard's range
+        valid = jnp.logical_and(
+            jnp.broadcast_to((idx < c)[None, :], s.shape),
+            jnp.logical_and(col >= c_lo, col < c_hi),
+        )
+        s = jnp.where(valid, s, NEG_INF)
+        gt = gt + jnp.sum((s > tgt).astype(jnp.int32), axis=-1)
+        eq = eq + jnp.sum((s == tgt).astype(jnp.int32), axis=-1)
+        cat_v = jnp.concatenate([vals, s], axis=-1)
+        cat_i = jnp.concatenate([ids, col], axis=-1)
+        v, sel = jax.lax.top_k(cat_v, k)
+        i = jnp.take_along_axis(cat_i, sel, axis=-1)
+        return (v, i, gt, eq), None
+
+    (vals, ids, gt, eq), _ = jax.lax.scan(
+        body, (vals0, ids0, cnt0, cnt0), jnp.arange(n_chunks)
+    )
+    return vals, ids, gt, eq
+
+
+def eval_tgt_scores_ref(
+    x: jax.Array,  # (B, d)
+    y: jax.Array,  # (C, d)
+    targets: jax.Array,  # (B,) i32 global catalog ids
+    *,
+    chunk: int = 512,
+    id_offset=0,
+):
+    """Target-column scores extracted from the SAME chunked matmul
+    ``eval_topk_ref`` streams (same ``chunk`` ⇒ bitwise-identical column
+    values ⇒ exact ``gt``/``eq`` counts). Rows whose target lies outside
+    ``y``'s id range contribute 0, so a ``psum`` over catalog shards
+    assembles the exact score. → (B,) f32."""
+    b, _ = x.shape
+    c = y.shape[0]
+    chunk = min(chunk, c)
+    pad = (-c) % chunk
+    yp = jnp.pad(y, ((0, pad), (0, 0)))
+    n_chunks = (c + pad) // chunk
+    f32 = jnp.float32
+    x32 = x.astype(f32)
+    tid = targets.astype(jnp.int32)[:, None]
+
+    def body(acc, jc):
+        rows = jax.lax.dynamic_slice_in_dim(yp, jc * chunk, chunk, 0)
+        s = x32 @ rows.astype(f32).T
+        col = id_offset + jc * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        hit = jnp.broadcast_to(col[None, :], s.shape) == tid
+        return acc + jnp.sum(jnp.where(hit, s, 0.0), axis=-1), None
+
+    acc, _ = jax.lax.scan(
+        body, jnp.zeros((b,), f32), jnp.arange(n_chunks)
+    )
+    return acc
+
+
 def fused_lse_ref(x: jax.Array, y: jax.Array) -> jax.Array:
     """Full-catalog logsumexp per position. x: (N, d), y: (C, d) → (N,)."""
     logits = x.astype(jnp.float32) @ y.astype(jnp.float32).T

@@ -16,6 +16,10 @@ arrays. Production behavior:
     written on one mesh restores onto any other (see CheckpointManager).
   * optional **int8 error-feedback gradient compression** models the
     cross-pod DCI payload (--grad-compression int8).
+  * **periodic in-loop evaluation** (``--eval-every``, seqrec only):
+    unsampled HR/NDCG/COV on a held-out user stream through
+    ``repro.eval`` — streaming rank-and-topk, never a ``(B, C)`` score
+    matrix; sharded over the mesh when the model axis is >1.
 
 On this CPU container, ``--smoke`` selects each arch's reduced config so
 the loop actually trains; the full configs are exercised via dryrun.py.
@@ -160,6 +164,8 @@ def train(
     watchdog: float = 5.0,
     skip_stragglers: bool = False,
     log_every: int = 10,
+    eval_every: int = 0,
+    eval_users: int = 128,
 ) -> Dict[str, Any]:
     """Run a real (smoke-scale) training loop; returns final metrics."""
     arch = get_arch(arch_name)
@@ -188,6 +194,23 @@ def train(
             cursor = Cursor.from_state(state["cursor"])
             start_step = int(state["step"]) + 1
             print(f"[restore] resumed from step {last}")
+
+    # Periodic unsampled eval (seqrec only — the other families have no
+    # leave-one-out catalog protocol): streaming rank-and-topk over a
+    # held-out user stream, sharded over the mesh when model-parallel.
+    do_eval = eval_every > 0 and arch.family == "seqrec"
+    eval_metrics: Dict[str, float] = {}
+    if do_eval:
+        from repro.data import SeqDataConfig as _SDC
+        from repro.data import SequenceDataset as _SD
+        from repro.eval import evaluate_streaming
+
+        eval_data = _SD(_SDC(
+            n_items=cfg.n_items, seq_len=cfg.max_len,
+            batch_size=eval_users,
+        ))
+        eval_batch, _ = eval_data.eval_batch(Cursor(seed=seed))
+        eval_mesh = mesh if mesh.shape.get("model", 1) > 1 else None
 
     losses, times = [], []
     prev_batch = None
@@ -227,6 +250,12 @@ def train(
                       f"(median {statistics.median(times):.2f}s)")
             if step % log_every == 0:
                 print(f"step {step:5d}  loss {loss:.4f}  {dt*1e3:.0f} ms")
+            if do_eval and (step + 1) % eval_every == 0:
+                eval_metrics = evaluate_streaming(
+                    params, cfg, eval_batch, mesh=eval_mesh
+                )
+                shown = {k: round(v, 4) for k, v in eval_metrics.items()}
+                print(f"[eval] step {step}: {shown}")
             if mgr is not None and (step + 1) % ckpt_every == 0:
                 mgr.save(
                     step,
@@ -241,12 +270,15 @@ def train(
                 )
     if mgr is not None:
         mgr.wait()
-    return {
+    out: Dict[str, Any] = {
         "first_loss": losses[0] if losses else None,
         "final_loss": losses[-1] if losses else None,
         "steps": len(losses),
         "mean_step_s": statistics.mean(times) if times else None,
     }
+    if eval_metrics:
+        out["eval"] = eval_metrics
+    return out
 
 
 def main() -> None:
@@ -262,6 +294,10 @@ def main() -> None:
                     choices=["exact", "union", "gspmd"])
     ap.add_argument("--grad-compression", choices=["int8"])
     ap.add_argument("--skip-stragglers", action="store_true")
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="run streaming unsampled eval every N steps "
+                         "(seqrec archs only; 0 = off)")
+    ap.add_argument("--eval-users", type=int, default=128)
     ap.add_argument("--smoke", action="store_true",
                     help="(default behaviour; flag kept for symmetry)")
     args = ap.parse_args()
@@ -276,6 +312,8 @@ def main() -> None:
         sce_mode=args.sce_mode,
         grad_compression=args.grad_compression,
         skip_stragglers=args.skip_stragglers,
+        eval_every=args.eval_every,
+        eval_users=args.eval_users,
     )
     print(out)
 

@@ -1,17 +1,40 @@
-"""Kernel-level benchmark: the fused SCE in-bucket kernel vs the
-materializing jnp path — analytic HBM traffic (the quantity the fusion
-eliminates) plus CPU-interpret wall time as a correctness-path check.
+"""Kernel-level benchmarks.
 
-On TPU, the fused kernel's win is structural: the (n_b, b_x, b_y) logit
-tensor never round-trips HBM (2 × 4·n_b·b_x·b_y bytes saved per pass).
+``--mode bucket`` (default, the original benchmark): the fused SCE
+in-bucket kernel vs the materializing jnp path — analytic HBM traffic
+(the quantity the fusion eliminates) plus CPU-interpret wall time as a
+correctness-path check.
+
+``--mode sce-pipeline``: the full SCE loss pipeline staged as
+selection / gather / loss, dense vs fused, per stage:
+
+  * selection — dense ``B @ Yᵀ`` + ``lax.top_k`` vs the streaming
+    ``kernels.ops.mips_topk`` (no ``(n_b, C)`` score matrix);
+  * gather+loss — materialized ``Y[idx_y]`` + jnp bucket CE vs the
+    scalar-prefetch ``kernels.ops.sce_gather_loss`` (no
+    ``(n_b, b_y, d)`` candidate tensor, dY straight into ``(C, d)``).
+
+Each row reports wall time AND the analytic peak loss-side elements
+from ``core.sce.sce_peak_elements`` — on CPU the kernels run in
+interpret mode, so the element columns are the structural result and
+the times are a correctness-path check, not TPU numbers. ``--json``
+dumps the rows (CI emits ``BENCH_sce_pipeline.json`` at small shape so
+the perf trajectory accumulates as build artifacts).
+
+On TPU, the fused paths' win is structural: the (n_b, C) selection
+scores, (n_b, b_x, b_y) logit tensor and (n_b, b_y, d) gather never
+round-trip HBM.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.sce import SCEConfig, sce_peak_elements
 from repro.kernels import ops, ref
 
 
@@ -24,7 +47,15 @@ def traffic_model(n_b, b_x, b_y, d, bytes_per=4):
     }
 
 
-def run():
+def _timeit(f, *args, reps=3):
+    f(*args).block_until_ready()  # compile + warm
+    t0 = time.time()
+    for _ in range(reps):
+        f(*args).block_until_ready()
+    return (time.time() - t0) / reps * 1e6
+
+
+def run_bucket():
     shapes = [(8, 128, 256, 64), (16, 256, 512, 64), (4, 362, 1024, 128)]
     rows = []
     for n_b, b_x, b_y, d in shapes:
@@ -40,20 +71,12 @@ def run():
             lambda *a: ops.sce_bucket_loss(*a, interpret=True)
         )
         f_ref = jax.jit(ref.sce_bucket_loss_ref)
-        f_fused(x_b, y_b, tgt, cand, pos).block_until_ready()
-        f_ref(x_b, y_b, tgt, cand, pos).block_until_ready()
-
-        def timeit(f):
-            t0 = time.time()
-            for _ in range(3):
-                f(x_b, y_b, tgt, cand, pos).block_until_ready()
-            return (time.time() - t0) / 3 * 1e6
-
+        args = (x_b, y_b, tgt, cand, pos)
         tm = traffic_model(n_b, b_x, b_y, d)
         rows.append({
             "shape": f"{n_b}x{b_x}x{b_y}x{d}",
-            "jnp_us": timeit(f_ref),
-            "fused_interp_us": timeit(f_fused),
+            "jnp_us": _timeit(f_ref, *args),
+            "fused_interp_us": _timeit(f_fused, *args),
             "hbm_saved_mib": (tm["jnp_path_bytes"] - tm["fused_bytes"])
             / 2**20,
         })
@@ -65,13 +88,117 @@ def run():
     return rows, derived
 
 
+def run_sce_pipeline(n=512, c=2048, d=32, n_b=16, b_x=32, b_y=64):
+    """Stage-by-stage dense vs fused timing + analytic peak elements."""
+    cfg = SCEConfig(n_b, b_x, b_y, use_mix=False)
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (n, d))
+    y = jax.random.normal(ks[1], (c, d))
+    t = jax.random.randint(ks[2], (n,), 0, c)
+    b = jax.random.normal(ks[3], (n_b, d))
+
+    # -- selection stage ---------------------------------------------------
+    def sel_dense(b, y):
+        _, idx = jax.lax.top_k(b @ y.T, b_y)
+        return idx
+
+    def sel_fused(b, y):
+        _, idx = ops.mips_topk(b, y, b_y, interpret=True)
+        return idx
+
+    sel_dense_us = _timeit(jax.jit(sel_dense), b, y)
+    sel_fused_us = _timeit(jax.jit(sel_fused), b, y)
+    idx_y = jax.jit(sel_dense)(b, y)
+    _, idx_x = jax.lax.top_k(b @ x.T, b_x)
+    x_b = jnp.take(x, idx_x, axis=0)
+    tgt_b = jnp.take(t, idx_x, axis=0)
+    pos = jnp.einsum("nxd,nxd->nx", x_b, jnp.take(y, tgt_b, axis=0))
+
+    # -- gather + loss stage -----------------------------------------------
+    def gl_dense(x_b, y, pos):
+        y_b = jnp.take(y, idx_y, axis=0)
+        return ref.sce_bucket_loss_ref(x_b, y_b, tgt_b, idx_y, pos)
+
+    def gl_fused(x_b, y, pos):
+        return ops.sce_gather_loss(
+            x_b, y, idx_y, tgt_b, idx_y, pos, interpret=True
+        )
+
+    gl_dense_us = _timeit(jax.jit(gl_dense), x_b, y, pos)
+    gl_fused_us = _timeit(jax.jit(gl_fused), x_b, y, pos)
+
+    elems = {
+        p: sce_peak_elements(cfg, n, c, d, fused=f)
+        for p, f in (("dense", False), ("fused", True))
+    }
+    rows = [{
+        "shape": f"N={n} C={c} d={d} nb={n_b} bx={b_x} by={b_y}",
+        "stage": stage,
+        "dense_us": du,
+        "fused_interp_us": fu,
+        "dense_peak_elems": de,
+        "fused_peak_elems": fe,
+    } for stage, du, fu, de, fe in [
+        ("selection", sel_dense_us, sel_fused_us,
+         elems["dense"]["selection_scores"],
+         elems["fused"]["selection_scores"]),
+        # gather has no standalone timing: dense folds it into the loss
+        # jit and fused never materializes it — analytic elements only.
+        ("gather", None, None,
+         elems["dense"]["candidate_embeddings"]
+         + elems["dense"]["candidate_grads"],
+         elems["fused"]["candidate_embeddings"]),
+        ("loss", gl_dense_us, gl_fused_us,
+         elems["dense"]["bucket_logits"], elems["fused"]["bucket_logits"]),
+        ("total", sel_dense_us + gl_dense_us, sel_fused_us + gl_fused_us,
+         elems["dense"]["total"], elems["fused"]["total"]),
+    ]]
+    derived = (
+        f"fused pipeline peak {elems['dense']['total']/elems['fused']['total']:.0f}x "
+        f"smaller than dense (elements; interpret-mode times are not TPU "
+        f"times)"
+    )
+    return rows, derived
+
+
+def run():
+    return run_bucket()
+
+
 def main():
-    rows, derived = run()
-    print("shape,jnp_us,fused_interp_us,hbm_saved_mib")
-    for r in rows:
-        print(f"{r['shape']},{r['jnp_us']:.0f},{r['fused_interp_us']:.0f},"
-              f"{r['hbm_saved_mib']:.1f}")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("bucket", "sce-pipeline"),
+                    default="bucket")
+    ap.add_argument("--json", help="write rows + derived summary to PATH")
+    ap.add_argument("--catalog", type=int, default=2048,
+                    help="sce-pipeline catalog size")
+    ap.add_argument("--positions", type=int, default=512,
+                    help="sce-pipeline position count")
+    args = ap.parse_args()
+    if args.mode == "sce-pipeline":
+        rows, derived = run_sce_pipeline(n=args.positions, c=args.catalog)
+        cols = ("stage", "dense_us", "fused_interp_us",
+                "dense_peak_elems", "fused_peak_elems")
+        print(",".join(cols))
+        for r in rows:
+            du = "-" if r["dense_us"] is None else f"{r['dense_us']:.0f}"
+            fu = ("-" if r["fused_interp_us"] is None
+                  else f"{r['fused_interp_us']:.0f}")
+            print(f"{r['stage']},{du},{fu},{r['dense_peak_elems']},"
+                  f"{r['fused_peak_elems']}")
+    else:
+        rows, derived = run()
+        print("shape,jnp_us,fused_interp_us,hbm_saved_mib")
+        for r in rows:
+            print(f"{r['shape']},{r['jnp_us']:.0f},"
+                  f"{r['fused_interp_us']:.0f},{r['hbm_saved_mib']:.1f}")
     print(derived)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"mode": args.mode, "rows": rows, "derived": derived},
+                      f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

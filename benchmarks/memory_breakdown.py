@@ -1,9 +1,19 @@
 """Paper Fig. 2 — peak-memory breakdown when training SASRec with full CE
-vs SCE: logit tensor vs model params vs optimizer state vs activations.
+vs SCE: loss-side tensors vs model params vs optimizer state vs
+activations.
 
 Analytic bytes from the shape algebra + *measured* per-device bytes from
 an AOT ``lower().compile().memory_analysis()`` of the real train step at
 the paper's example workload scale (s=128, l=200).
+
+The loss-side column uses the HONEST whole-pipeline model
+(``core.sce.sce_peak_elements``): the paper's §3.1 number counts only
+the bucket-logit tensor, but the materializing path also holds the
+``(n_b, max(N, C))`` selection scores and the ``(n_b, b_y, d)``
+candidate gather + its VJP cotangent. Rows come in pairs — ``sce``
+(materializing jnp path) and ``sce-fused`` (streaming
+``mips_topk`` + scalar-prefetch gather kernels) — so the before/after
+of the fusion is explicit.
 """
 from __future__ import annotations
 
@@ -27,8 +37,14 @@ def analytic_breakdown(n_items: int, batch: int = 128, seq: int = 200,
     rows = []
     for loss, logit_b in [
         ("ce", full_ce_memory_bytes(n_pos, n_items)),
-        ("sce", sce_loss_memory_bytes(sce_cfg)
-         + sce_cfg.n_buckets * max(n_pos, n_items) * 4),  # projections
+        ("sce", sce_loss_memory_bytes(
+            sce_cfg, n_positions=n_pos, catalog=n_items, d_model=d,
+            fused=False,
+        )),
+        ("sce-fused", sce_loss_memory_bytes(
+            sce_cfg, n_positions=n_pos, catalog=n_items, d_model=d,
+            fused=True,
+        )),
     ]:
         rows.append({
             "loss": loss,

@@ -50,9 +50,10 @@ def main():
               f"single-device oracle {float(ref):.5f}  ✓")
 
     print("\nwhat moved over the wire (per step, per device):")
-    print("  exact : 1 all_to_all of (value,id,row) candidate triples")
-    print("  union : 1 psum of (n_b, b_x) partial (max,sumexp) — ~KBs;")
-    print("          candidate embeddings never leave their shard")
+    print("  exact : 2 all-gathers of (value, global-id) candidate pairs")
+    print("          + 1 psum of (n_b, b_x) partial-LSE merges")
+    print("  union : 1 psum of (n_b, b_x) partial (max,sumexp) — ~KBs")
+    print("  candidate embeddings never leave their shard in either mode")
 
 
 if __name__ == "__main__":

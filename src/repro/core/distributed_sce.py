@@ -7,29 +7,39 @@ Data layout (mesh axes ``("data", "model")`` or ``("pod", "data", "model")``):
     batch anyway, so per-shard draws are a faithful randomized variant —
     recorded as an assumption change in DESIGN.md §2).
 
-Two distribution strategies (``SCEConfig → dist_mode`` chosen by caller):
+Both distribution strategies share one skeleton — per-shard streaming
+stage-1 selection (``kernels.ops.mips_topk`` when ``cfg.use_kernel``:
+the ``(n_b, C_local)`` score matrix never exists), an ownership-masked
+in-bucket partial logsumexp against the LOCAL catalog slice, and a
+log-space cross-shard merge (one pmax + one psum of ``(n_b, b_x)``
+floats, ~1 MB). They differ only in the candidate SET:
 
-``"exact"`` — the n_b buckets of a data shard are split across model
-  shards (n_b/m each). Stage 1: every model shard takes its local
-  top-min(b_y, C/m) per bucket and ships (value, id, embedding-row)
-  triples through ONE all_to_all (1/m the payload of an all-gather);
-  stage 2: a local top-min(b_y, C) over the union reproduces the exact
-  global top-b_y — both clips mirror the oracle's min(b_y, C), so the
-  equality holds even when b_y exceeds a catalog slice.
-  Identical selection to a single-device run → the equality tests.
-  Memory: the stage-1 (n_b, b_y, d) gather — fine for recsys widths
-  (d=64), heavy for LM widths (d≥2304).
+``"exact"`` — ids-only exact MIPS: every model shard merges the
+  per-shard local top-min(b_y, C/m) (value, id) pairs through
+  ``dist.collectives.distributed_topk_from_local`` — the exact global
+  top-b_y, tie order included, replicated over ``model``. Each shard
+  then evaluates only the candidates it OWNS (ids inside its catalog
+  slice; the rest are masked with the negative-id rule) and the psum
+  merge reassembles the exact full-candidate denominator. Identical
+  selection to a single-device run → the equality tests. Candidate
+  *embeddings never cross the wire* — the old implementation shipped
+  ``(n_b, b_y/m, d)`` embedding-row triples through an all_to_all,
+  which dominated the payload at LM widths (d ≥ 2304); the ids-only
+  exchange is ``d/2``× smaller.
 
-``"union"`` — the TPU-native mode (beyond-paper §Perf optimization):
-  every model shard keeps its local top-(b_y/m) candidates and computes
-  in-bucket partial (max, sumexp) ONLINE against its own catalog slice;
-  partials merge across ``model`` in log-space with one tiny psum
-  ((n_b, b_x)·2 floats — ~1 MB). Candidate embeddings NEVER cross the
-  wire. The candidate set is the per-shard-balanced union of local
-  top-(b_y/m) — same size b_y, same hard-negative intent, slightly
-  different members than exact global top-b_y (both are approximate MIPS;
-  the paper's bucket selection is itself a heuristic). Deterministically
-  reproducible by ``sce_loss_sharded_ref(..., mode="union")``.
+``"union"`` — the TPU-native approximate mode (beyond-paper §Perf
+  optimization): every shard keeps its local top-(b_y/m) — NO candidate
+  exchange at all. The candidate set is the per-shard-balanced union of
+  local top-(b_y/m) — same size b_y, same hard-negative intent,
+  slightly different members than exact global top-b_y (both are
+  approximate MIPS; the paper's bucket selection is itself a
+  heuristic). Deterministically reproducible by
+  ``sce_loss_sharded_ref(..., mode="union")``.
+
+With ``cfg.use_kernel`` the in-bucket partials run through the
+scalar-prefetch gather kernel (``kernels.ops.sce_gather_plse``) — the
+``(n_b, b_y, d)`` candidate gather and its VJP scatter never exist; the
+local ``dY`` accumulates straight into the ``(C_local, d)`` gradient.
 
 The full ``(n_b, C)`` score matrix and the ``(N, C)`` logit matrix never
 exist on any device in either mode.
@@ -46,7 +56,7 @@ from jax.sharding import Mesh
 
 from repro.core.sce import NEG_INF, SCEConfig, apply_softcap, make_bucket_centers
 from repro.dist import shard_map
-from repro.dist.collectives import all_to_all_bucket_shuffle
+from repro.dist.collectives import distributed_topk_from_local
 from repro.dist.sharding import batch_spec, catalog_spec, data_axes, replicated_spec
 
 
@@ -91,98 +101,42 @@ def _aggregate(per_bucket_losses, idx_x, n_local, vm_l, axes):
     return per_pos
 
 
-def _sce_inner_exact(
-    key, x_l, y_l, t_l, vm_l, *, cfg: SCEConfig, dp, tp
-):
-    n_local, d = x_l.shape
-    c_local = y_l.shape[0]
-    m = jax.lax.psum(1, tp)
-    tp_i = jax.lax.axis_index(tp)
-
-    n_b = cfg.n_buckets  # caller guarantees n_b % m == 0
-    nb_l = n_b // m
-    # Stage-1 candidates are clipped per catalog SLICE, stage-2 per full
-    # catalog — mirroring sce_loss_sharded_ref's min(b_y, C) clip so the
-    # equality holds even when bucket_size_y > C/m (a shard then simply
-    # contributes its whole slice).
-    b_y_loc = min(cfg.bucket_size_y, c_local)
-    b_y = min(cfg.bucket_size_y, m * c_local)
-    b_x = min(cfg.bucket_size_x, n_local)
-
-    key_l = jax.random.fold_in(key, _data_shard_index(dp))
-    b = make_bucket_centers(
-        key_l, x_l, n_b, use_mix=cfg.use_mix, valid_mask=vm_l
-    )
-
-    # -- Y side: local top-b_y for ALL buckets; one all_to_all of the
-    #    (value, id, row) candidate triples; exact top-b_y over the union.
-    ys = jax.lax.stop_gradient(y_l)
-    yp = b @ ys.T  # (n_b, C_local)
-    vals, idx = jax.lax.top_k(yp, b_y_loc)
-    emb = jnp.take(y_l, idx, axis=0)  # (n_b, b_y_loc, d) — differentiable
-    gidx = idx + tp_i * c_local
-
-    vals_s = all_to_all_bucket_shuffle(vals, tp)  # (m, nb_l, b_y_loc)
-    gidx_s = all_to_all_bucket_shuffle(gidx, tp)
-    emb_s = all_to_all_bucket_shuffle(emb, tp)  # (m, nb_l, b_y_loc, d)
-
-    vals_u = jnp.swapaxes(vals_s, 0, 1).reshape(nb_l, m * b_y_loc)
-    gidx_u = jnp.swapaxes(gidx_s, 0, 1).reshape(nb_l, m * b_y_loc)
-    emb_u = jnp.swapaxes(emb_s, 0, 1).reshape(nb_l, m * b_y_loc, d)
-    _, sel = jax.lax.top_k(vals_u, b_y)  # (nb_l, b_y)
-    cand_ids = jnp.take_along_axis(gidx_u, sel, axis=-1)
-    y_b = jnp.take_along_axis(emb_u, sel[..., None], axis=-2)
-
-    # -- X side: this model shard's bucket slice over local positions -----
-    xs = jax.lax.stop_gradient(x_l)
-    b_slice = jax.lax.dynamic_slice_in_dim(b, tp_i * nb_l, nb_l, axis=0)
-    xp = b_slice @ xs.T  # (nb_l, N_local)
-    xp = jnp.where(vm_l[None, :], xp, NEG_INF)
-    _, idx_x = jax.lax.top_k(xp, b_x)
-    x_b = jnp.take(x_l, idx_x, axis=0)  # (nb_l, b_x, d)
-    tgt_b = jnp.take(t_l, idx_x, axis=0)
-
-    pos_logit_all = _positive_logits(x_l, y_l, t_l, tp, cfg.logit_softcap)
-    pos_logit = jnp.take(pos_logit_all, idx_x, axis=0)
-
-    # -- in-bucket CE (Algorithm 1 lines 12–15) ----------------------------
-    if cfg.use_kernel and cfg.logit_softcap is None:
+def _local_topk(b, rows, k, *, use_kernel, valid=None):
+    """Per-shard stage-1 MIPS: streaming ``mips_topk`` kernel when
+    ``use_kernel`` (the ``(n_b, C_local)`` score matrix never exists;
+    inside interpret-mode ``shard_map`` this routes to the chunked
+    reference — see kernels/ops.py), dense projection + ``lax.top_k``
+    otherwise. Identical outputs and tie order either way whenever each
+    row has ≥ k selectable columns; in the degenerate valid-starved
+    case the kernel's placeholder tail slots are remapped to the first
+    masked position (see ``core.sce._sanitize_placeholder_ids``), which
+    matches the dense path's effect — tail slots land on positions the
+    valid mask excludes from coverage."""
+    if use_kernel:
         from repro.kernels import ops as _kops
+        from repro.core.sce import _sanitize_placeholder_ids
 
-        losses = _kops.sce_bucket_loss(x_b, y_b, tgt_b, cand_ids, pos_logit)
-    else:
-        neg = apply_softcap(
-            jnp.einsum("nxd,nyd->nxy", x_b, y_b), cfg.logit_softcap
-        )
-        collide = cand_ids[:, None, :] == tgt_b[:, :, None]
-        neg = jnp.where(collide, NEG_INF, neg)
-        all_logits = jnp.concatenate([pos_logit[..., None], neg], axis=-1)
-        losses = jax.nn.logsumexp(all_logits, axis=-1) - pos_logit
-
-    # -- cross-bucket max: local segment_max, then max across model shards -
-    per_pos = _aggregate(losses, idx_x, n_local, vm_l, dp)
-    all_pp = jax.lax.all_gather(per_pos, tp, axis=0)  # (m, N_local)
-    per_pos = jnp.max(all_pp, axis=0)
-    covered = (per_pos > NEG_INF / 2) & vm_l
-    per_pos = jnp.where(covered, per_pos, 0.0)
-
-    # num/den identical across model shards; psum over (dp + tp) cancels
-    # the m factor in the ratio and keeps the output VMA-unvarying.
-    axes = tuple(dp) + (tp,)
-    num = jax.lax.psum(jnp.sum(per_pos), axes)
-    den = jax.lax.psum(jnp.sum(covered.astype(per_pos.dtype)), axes)
-    return num / jnp.maximum(den, 1.0)
+        vals, idx = _kops.mips_topk(b, rows, k, valid=valid)
+        return vals, _sanitize_placeholder_ids(idx, valid)
+    p = b @ rows.T
+    if valid is not None:
+        p = jnp.where(valid[None, :], p, NEG_INF)
+    return jax.lax.top_k(p, min(k, rows.shape[0]))
 
 
-def _sce_inner_union(
-    key, x_l, y_l, t_l, vm_l, *, cfg: SCEConfig, dp, tp, bucket_chunks: int
+def _sce_inner(
+    key, x_l, y_l, t_l, vm_l, *, cfg: SCEConfig, dp, tp,
+    bucket_chunks: int, exact: bool,
 ):
-    """Union mode: local candidates only, log-space partial merge.
+    """Shared inner for both distributed modes (module docstring).
 
-    Per model shard: candidates = local top-(b_y/m) of its catalog slice;
-    in-bucket partial (max, sumexp) computed against ALL buckets in
-    ``bucket_chunks`` rematerialized chunks (peak = one chunk's x_b
-    gather); merged across ``model`` with one psum/pmax pair.
+    Per model shard: stage-1 streaming selection, ownership-masked
+    in-bucket partial LSE over the LOCAL catalog slice (computed for ALL
+    buckets in ``bucket_chunks`` rematerialized chunks — peak is one
+    chunk's gather), then ONE log-space pmax/psum merge across
+    ``model``. ``exact`` selects the candidate set: exact global
+    top-b_y ids via ``distributed_topk_from_local`` vs the local
+    top-(b_y/m) union.
     """
     n_local, d = x_l.shape
     c_local = y_l.shape[0]
@@ -191,7 +145,7 @@ def _sce_inner_union(
 
     n_b = cfg.n_buckets
     b_x = min(cfg.bucket_size_x, n_local)
-    k_local = max(1, min(cfg.bucket_size_y // m, c_local))
+    use_kernel = cfg.use_kernel and cfg.logit_softcap is None
 
     key_l = jax.random.fold_in(key, _data_shard_index(dp))
     b = make_bucket_centers(
@@ -200,46 +154,72 @@ def _sce_inner_union(
 
     # X side: ALL buckets on every shard (needed for the local partials).
     xs = jax.lax.stop_gradient(x_l)
-    xp = jnp.where(vm_l[None, :], b @ xs.T, NEG_INF)  # (n_b, N_local)
-    _, idx_x = jax.lax.top_k(xp, b_x)  # (n_b, b_x)
+    _, idx_x = _local_topk(
+        b, xs, b_x, use_kernel=use_kernel, valid=vm_l
+    )  # (n_b, b_x)
 
-    # Y side: local top-(b_y/m) per bucket — no communication.
+    # Y side: per-shard stage-1 over the local catalog slice.
     ys = jax.lax.stop_gradient(y_l)
-    yp = b @ ys.T  # (n_b, C_local)
-    _, idx_y = jax.lax.top_k(yp, k_local)  # (n_b, k_local)
-    gidx_y = idx_y + tp_i * c_local
+    if exact:
+        # Stage 1 clips per catalog SLICE, the merge per full catalog —
+        # mirroring sce_loss_sharded_ref's min(b_y, C) clip so the
+        # equality holds even when bucket_size_y > C/m (a shard then
+        # simply contributes its whole slice).
+        b_y_loc = min(cfg.bucket_size_y, c_local)
+        vals_l, idx_l = _local_topk(b, ys, b_y_loc, use_kernel=use_kernel)
+        gids_l = idx_l + tp_i * c_local
+        # ids-only exact merge, replicated over ``model`` (tie order =
+        # dense lax.top_k — same candidates as the single-device oracle).
+        _, cand_gids = distributed_topk_from_local(
+            vals_l, gids_l, cfg.bucket_size_y, tp
+        )  # (n_b, min(b_y, C))
+        local = cand_gids - tp_i * c_local
+        own = jnp.logical_and(local >= 0, local < c_local)
+        idx_y = jnp.clip(local, 0, c_local - 1)  # gather rows (clipped)
+        # Non-owned candidates are evaluated on their home shard; mask
+        # them here with the negative-id rule shared by kernels and refs.
+        gidx_y = jnp.where(own, cand_gids, -1)
+        k_cand = cand_gids.shape[-1]
+    else:
+        # Union mode: local top-(b_y/m) per bucket — no communication.
+        k_cand = max(1, min(cfg.bucket_size_y // m, c_local))
+        _, idx_y = _local_topk(b, ys, k_cand, use_kernel=use_kernel)
+        gidx_y = idx_y + tp_i * c_local
 
     pos_logit_all = _positive_logits(x_l, y_l, t_l, tp, cfg.logit_softcap)
 
-    assert n_b % bucket_chunks == 0, (n_b, bucket_chunks)
+    while n_b % bucket_chunks:
+        bucket_chunks -= 1
     nb_c = n_b // bucket_chunks
 
     def chunk_partials(chunk):
-        """One bucket chunk → partial LSE over local candidates.
+        """One bucket chunk → partial LSE over locally-owned candidates.
         Rematerialized so the backward never stacks the (n_b, b_x, d)
-        gathers. Kernel-backed on TPU (ops.sce_bucket_plse streams the
-        candidate tiles through VMEM)."""
+        gathers. Kernel-backed on TPU: ops.sce_gather_plse prefetch-
+        gathers the candidate rows from the local catalog slice and
+        accumulates dY straight into (C_local, d)."""
         idx_x_c, idx_y_c, gidx_c = chunk
         x_b = jnp.take(x_l, idx_x_c, axis=0)  # (nb_c, b_x, d)
-        y_b = jnp.take(y_l, idx_y_c, axis=0)  # (nb_c, k_local, d)
         tgt_b = jnp.take(t_l, idx_x_c, axis=0)
-        if cfg.use_kernel and cfg.logit_softcap is None:
+        if use_kernel:
             from repro.kernels import ops as _kops
 
-            return _kops.sce_bucket_plse(x_b, y_b, tgt_b, gidx_c)
+            return _kops.sce_gather_plse(x_b, y_l, idx_y_c, tgt_b, gidx_c)
+        y_b = jnp.take(y_l, idx_y_c, axis=0)  # (nb_c, k_cand, d)
         neg = apply_softcap(
             jnp.einsum("nxd,nyd->nxy", x_b, y_b), cfg.logit_softcap
         )
         collide = gidx_c[:, None, :] == tgt_b[:, :, None]
-        neg = jnp.where(collide, NEG_INF, neg).astype(jnp.float32)
+        invalid = jnp.logical_or(collide, (gidx_c < 0)[:, None, :])
+        neg = jnp.where(invalid, NEG_INF, neg).astype(jnp.float32)
         mx = jnp.max(neg, axis=-1)  # (nb_c, b_x)
         sx = jnp.sum(jnp.exp(neg - mx[..., None]), axis=-1)
         return mx + jnp.log(jnp.maximum(sx, 1e-30))
 
     chunks = (
         idx_x.reshape(bucket_chunks, nb_c, b_x),
-        idx_y.reshape(bucket_chunks, nb_c, k_local),
-        gidx_y.reshape(bucket_chunks, nb_c, k_local),
+        idx_y.reshape(bucket_chunks, nb_c, k_cand),
+        gidx_y.reshape(bucket_chunks, nb_c, k_cand),
     )
     plse = jax.lax.map(
         jax.checkpoint(chunk_partials, prevent_cse=False), chunks
@@ -279,9 +259,11 @@ def sce_loss_sharded(
 ):
     """Distributed SCE loss (see module docstring).
 
-    ``cfg.n_buckets`` is rounded up to a multiple of the model-axis size so
-    buckets split evenly; callers that need paper-exact ``n_b`` should pass
-    a pre-rounded config.
+    ``cfg.n_buckets`` is rounded up to a multiple of the model-axis size
+    (historical invariant kept so configs reproduce across versions;
+    callers that need paper-exact ``n_b`` should pass a pre-rounded
+    config). ``bucket_chunks`` controls the rematerialized bucket
+    chunking of the partial-LSE stage (default: the model-axis size).
     """
     dp = data_axes(mesh)
     tp = "model"
@@ -291,17 +273,12 @@ def sce_loss_sharded(
     if valid_mask is None:
         valid_mask = jnp.ones(x.shape[:1], bool)
 
-    if mode == "exact":
-        inner = functools.partial(_sce_inner_exact, cfg=cfg, dp=dp, tp=tp)
-    elif mode == "union":
-        bc = bucket_chunks or m
-        while cfg.n_buckets % bc:
-            bc -= 1
-        inner = functools.partial(
-            _sce_inner_union, cfg=cfg, dp=dp, tp=tp, bucket_chunks=bc
-        )
-    else:
+    if mode not in ("exact", "union"):
         raise ValueError(mode)
+    inner = functools.partial(
+        _sce_inner, cfg=cfg, dp=dp, tp=tp,
+        bucket_chunks=bucket_chunks or m, exact=(mode == "exact"),
+    )
     fn = shard_map(
         inner,
         mesh=mesh,

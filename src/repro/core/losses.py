@@ -334,7 +334,12 @@ def loss_peak_elements(
         return n_positions * (catalog // k) + n_positions * d
     if name == "sce":
         assert cfg is not None
-        sel = cfg.n_buckets * (cfg.bucket_size_x + cfg.bucket_size_y) * d
-        proj = cfg.n_buckets * max(n_positions, catalog)
-        return cfg.logit_tensor_elements() + sel + proj
+        # Whole-pipeline model (selection scores + candidate gather and
+        # its cotangent + logits; fused= follows cfg.use_kernel) — the
+        # same accounting core.sce.sce_peak_elements documents.
+        from repro.core.sce import sce_peak_elements
+
+        return sce_peak_elements(
+            cfg, n_positions, catalog, d, fused=cfg.use_kernel
+        )["total"] + cfg.n_buckets * cfg.bucket_size_x * d  # x_b gather
     raise KeyError(name)

@@ -110,14 +110,38 @@ def make_bucket_centers(
     xs = jax.lax.stop_gradient(x)
     if not use_mix:
         return jax.random.normal(key, (n_buckets, xs.shape[-1]), xs.dtype)
-    omega = jax.random.normal(key, (n_buckets, xs.shape[0]), xs.dtype)
+    # Ω is drawn — and the N-term projection sum accumulated — in f32
+    # regardless of the training dtype: a bf16 draw quantizes Ω to ~8-bit
+    # mantissas and a bf16 matmul accumulation loses the tail of the
+    # N-term sums, both of which visibly shift WHICH catalog rows the
+    # buckets select at N ≥ 4k (regression-tested in test_sce_core).
+    # Cast back only after normalization.
+    omega = jax.random.normal(key, (n_buckets, xs.shape[0]), jnp.float32)
     if valid_mask is not None:
         # Padding positions carry no information — exclude from the mix.
-        omega = omega * valid_mask[None, :].astype(xs.dtype)
-    b = omega @ xs
+        omega = omega * valid_mask[None, :].astype(jnp.float32)
+    b = jnp.dot(omega, xs, preferred_element_type=jnp.float32)
     # Normalize scale so projections are comparable across N (keeps top-k
     # selection invariant; does not change which items are selected).
-    return b / jnp.sqrt(jnp.asarray(max(xs.shape[0], 1), xs.dtype))
+    b = b / jnp.sqrt(jnp.asarray(max(xs.shape[0], 1), jnp.float32))
+    return b.astype(xs.dtype)
+
+
+def _sanitize_placeholder_ids(
+    idx: jax.Array, valid_mask: Optional[jax.Array]
+) -> jax.Array:
+    """Remap streaming-top-k placeholder ids (rows with fewer valid
+    columns than k emit ``INT32_MAX`` tail slots) to the first MASKED
+    position. Downstream gathers then read an in-range row whose
+    position ``valid_mask`` already excludes from coverage — the same
+    effect as the dense path, whose ``NEG_INF``-tie tail lands on the
+    lowest-index masked positions. No-op when every row has enough
+    valid columns (no placeholders occur)."""
+    if valid_mask is None:
+        return idx
+    placeholder = jnp.iinfo(jnp.int32).max
+    fallback = jnp.argmin(valid_mask.astype(jnp.int32)).astype(idx.dtype)
+    return jnp.where(idx == placeholder, fallback, idx)
 
 
 def select_buckets(
@@ -131,9 +155,30 @@ def select_buckets(
     """Algorithm 1 lines 3–11: project and take per-bucket top-k.
 
     Returns ``(idx_x, idx_y)`` of shapes ``(n_b, b_x)`` and ``(n_b, b_y)``.
+
+    With ``cfg.use_kernel`` the selection runs through the streaming
+    ``kernels.ops.mips_topk`` kernel — the dense ``(n_b, C)`` /
+    ``(n_b, N)`` score matrices never exist, and the selected ids
+    (including tie order) are bit-identical to this function's dense
+    ``lax.top_k`` path whenever each row has ≥ k selectable columns.
+    In the degenerate case (fewer valid positions than ``b_x``) the
+    kernel's placeholder tail slots are remapped to the first masked
+    position — the dense path's tail also lands on masked positions
+    (``NEG_INF`` ties break toward the lowest index), so both paths
+    agree that tail slots point at positions ``valid_mask`` excludes
+    from coverage.
     """
     xs = jax.lax.stop_gradient(x)
     ys = jax.lax.stop_gradient(y)
+    if cfg.use_kernel:
+        from repro.kernels import ops as _kops
+
+        _, idx_x = _kops.mips_topk(
+            b, xs, cfg.bucket_size_x, valid=valid_mask
+        )
+        idx_x = _sanitize_placeholder_ids(idx_x, valid_mask)
+        _, idx_y = _kops.mips_topk(b, ys, cfg.bucket_size_y)
+        return idx_x, idx_y
     xp = b @ xs.T  # (n_b, N)
     if valid_mask is not None:
         xp = jnp.where(valid_mask[None, :], xp, NEG_INF)
@@ -237,7 +282,6 @@ def sce_loss(
     idx_x, idx_y = select_buckets(b, x, y, cfg, valid_mask=valid_mask)
 
     x_b = jnp.take(x, idx_x, axis=0)  # (n_b, b_x, d)
-    y_b = jnp.take(y, idx_y, axis=0)  # (n_b, b_y, d)
     tgt_b = jnp.take(targets, idx_x, axis=0)  # (n_b, b_x)
     pos_emb = jnp.take(y, tgt_b, axis=0)  # (n_b, b_x, d)
     pos_logit = apply_softcap(
@@ -247,8 +291,14 @@ def sce_loss(
     if cfg.use_kernel and cfg.logit_softcap is None:
         from repro.kernels import ops as _kops
 
-        losses = _kops.sce_bucket_loss(x_b, y_b, tgt_b, idx_y, pos_logit)
+        # Fully fused candidate path: the kernel gathers Y[idx_y] rows
+        # into VMEM on the fly (scalar prefetch) — the (n_b, b_y, d)
+        # candidate tensor and its VJP scatter never exist in HBM.
+        losses = _kops.sce_gather_loss(
+            x_b, y, idx_y, tgt_b, idx_y, pos_logit
+        )
     else:
+        y_b = jnp.take(y, idx_y, axis=0)  # (n_b, b_y, d)
         losses = _in_bucket_losses_jnp(
             x_b, y_b, tgt_b, idx_y, pos_logit, softcap=cfg.logit_softcap
         )
@@ -275,9 +325,90 @@ def sce_loss(
     return loss, aux
 
 
-def sce_loss_memory_bytes(cfg: SCEConfig, dtype_bytes: int = 4) -> int:
-    """Analytic peak bytes of the loss-side tensors (paper §3.1)."""
-    return cfg.logit_tensor_elements() * dtype_bytes
+def sce_peak_elements(
+    cfg: SCEConfig,
+    n_positions: int,
+    catalog: int,
+    d_model: int,
+    *,
+    fused: bool = False,
+    block_c: int = 512,
+    block_by: int = 256,
+) -> dict:
+    """Honest analytic peak loss-side elements, per pipeline stage.
+
+    The paper's §3.1 model (:func:`sce_loss_memory_bytes` without shape
+    arguments) counts only the ``(n_b, b_x, b_y)`` bucket-logit tensor —
+    but the *selection* stage of the materializing path computes dense
+    ``(n_b, N)`` / ``(n_b, C)`` score matrices (larger than the logit
+    tensor once ``C > b_x·b_y``), and the candidate gather materializes
+    ``(n_b, b_y, d)`` embeddings whose VJP scatter holds an equal-sized
+    gradient. This model accounts for all of them.
+
+    ``fused=False``: the pure-jnp path (selection scores, gathered
+    candidates + their cotangent, bucket logits).
+    ``fused=True``: the streaming kernel path —
+    ``kernels.ops.mips_topk`` selection (one ``(n_b, block_c)`` score
+    tile + the ``(n_b, 2k)`` merge scratch, via
+    ``topk_merge.streaming_topk_elements``) and the scalar-prefetch
+    gather loss (one ``(block_by, d)`` VMEM gather tile + the
+    ``(n_b, b_x)`` loss/lse rows; candidates and their gradients never
+    materialize — ``dY`` lands in the parameter-gradient buffer that
+    exists regardless).
+
+    Returns a dict of per-stage element counts plus ``"total"``.
+    """
+    from repro.kernels.topk_merge import streaming_topk_elements
+
+    n_b = cfg.n_buckets
+    b_x = min(cfg.bucket_size_x, n_positions)
+    b_y = min(cfg.bucket_size_y, catalog)
+    if fused:
+        k = max(b_x, b_y)
+        out = {
+            "selection_scores": streaming_topk_elements(n_b, k, block_c),
+            "candidate_embeddings": min(block_by, b_y) * d_model,
+            "candidate_grads": 0,
+            "bucket_logits": 2 * n_b * b_x,  # streamed: loss + lse rows
+        }
+    else:
+        out = {
+            "selection_scores": n_b * max(n_positions, catalog),
+            "candidate_embeddings": n_b * b_y * d_model,
+            "candidate_grads": n_b * b_y * d_model,
+            "bucket_logits": n_b * b_x * b_y,
+        }
+    out["total"] = sum(out.values())
+    return out
+
+
+def sce_loss_memory_bytes(
+    cfg: SCEConfig,
+    dtype_bytes: int = 4,
+    *,
+    n_positions: Optional[int] = None,
+    catalog: Optional[int] = None,
+    d_model: Optional[int] = None,
+    fused: bool = False,
+) -> int:
+    """Analytic peak bytes of the loss-side tensors.
+
+    Without shape arguments this is the paper's §3.1 model — the
+    bucket-logit tensor only (kept as-is: the §3.1 crossover law and
+    its property tests are statements about that tensor). With
+    ``n_positions``/``catalog``/``d_model`` it returns the honest
+    whole-pipeline peak from :func:`sce_peak_elements`, and ``fused=``
+    selects the materializing vs streaming-kernel path.
+    """
+    if n_positions is None:
+        return cfg.logit_tensor_elements() * dtype_bytes
+    assert catalog is not None and d_model is not None
+    return (
+        sce_peak_elements(
+            cfg, n_positions, catalog, d_model, fused=fused
+        )["total"]
+        * dtype_bytes
+    )
 
 
 def full_ce_memory_bytes(n_positions: int, catalog: int, dtype_bytes: int = 4) -> int:

@@ -3,10 +3,13 @@
 Two primitives cover every cross-``model``-shard exchange the SCE stack
 performs (DESIGN.md §2/§4):
 
-  * :func:`all_to_all_bucket_shuffle` — the ONE all_to_all of exact-mode
-    distributed MIPS: every model shard ships its per-bucket local
-    top-k (value, id, embedding-row) candidate triples to the shard that
-    owns each bucket. Payload is 1/m of the equivalent all-gather.
+  * :func:`all_to_all_bucket_shuffle` — route per-bucket payloads to a
+    contiguous owner shard; 1/m the payload of an all-gather. (Until
+    PR 3 this carried exact-mode's (value, id, embedding-row) candidate
+    triples; the ids-only exact mode now merges candidates through
+    :func:`distributed_topk_from_local` instead — embeddings never
+    cross the wire — and the shuffle is retained as a general
+    bucket-routing primitive.)
   * :func:`distributed_topk` — exact two-stage top-k over a row-sharded
     score matrix: local top-k, one all-gather of the (m · k) candidate
     (value, global-id) pairs, local top-k over the union. The result is
@@ -92,9 +95,11 @@ def _axis_size(axis_name: str) -> Optional[int]:
 def all_to_all_bucket_shuffle(x: jax.Array, axis_name: str) -> jax.Array:
     """Route per-bucket candidate payloads to their owning model shard.
 
-    The ONE all_to_all of exact-mode distributed MIPS (DESIGN.md §4):
-    payload is 1/m of the equivalent all-gather. Buckets are owned
+    Payload is 1/m of the equivalent all-gather. Buckets are owned
     contiguously: shard ``j`` owns buckets ``[j·n_b/m, (j+1)·n_b/m)``.
+    (Formerly the exact-mode candidate-triple carrier — DESIGN.md §4;
+    retained as a general bucket-routing primitive since the ids-only
+    rewrite.)
 
     Parameters
     ----------

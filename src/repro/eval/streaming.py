@@ -183,11 +183,16 @@ class MetricAccumulator:
 # core.losses.loss_peak_elements on the loss side)
 # ---------------------------------------------------------------------------
 def eval_peak_elements(batch: int, k: int, block_c: int = 512) -> int:
-    """Peak live score-side elements of the streaming path: one
-    ``(B, block_c)`` score tile + the ``(B, k)`` value/id accumulators
-    + the ``(B,)`` count pair — ``O(B·(K + block))``, independent of
+    """Peak live score-side elements of the streaming path: the shared
+    streaming-top-k term (one ``(B, block_c)`` score tile + the
+    ``(B, k)`` value/id merge buffers — ``topk_merge.
+    streaming_topk_elements``, the same model that prices the fused
+    MIPS selection in ``core.sce.sce_peak_elements``) + the ``(B,)``
+    ``gt``/``eq`` count pair. ``O(B·(K + block))``, independent of
     ``C``."""
-    return batch * (block_c + 2 * k + 2)
+    from repro.kernels.topk_merge import streaming_topk_elements
+
+    return streaming_topk_elements(batch, k, block_c) + 2 * batch
 
 
 def dense_eval_elements(batch: int, catalog: int) -> int:

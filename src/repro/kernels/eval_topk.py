@@ -11,9 +11,10 @@ This kernel streams the catalog embedding table through VMEM in
 ``(block_c, d)`` tiles and keeps only per-row running accumulators:
 
   * ``(topk_vals, topk_ids)`` — a ``(block_b, K)`` merge buffer updated
-    per tile by K rounds of first-occurrence argmax over the
-    ``(K + block_c)``-wide concatenation of the running buffer and the
-    tile scores (max/min/where only — no sort, Mosaic-friendly);
+    per tile by the shared first-occurrence-argmax recurrence of
+    ``kernels/topk_merge.py`` (max/min/where only — no sort,
+    Mosaic-friendly; the same implementation drives the MIPS
+    candidate-selection kernel ``kernels/mips_topk.py``);
   * ``(gt, eq)`` — counts of catalog scores strictly greater than /
     exactly equal to the target score, from which the caller derives the
     pessimistic-tie rank ``gt + max(eq - 1, 0)`` (see
@@ -47,8 +48,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.topk_merge import ID_PAD as _ID_PAD
+from repro.kernels.topk_merge import merge_topk_tile
+
 NEG_INF = -1e30
-_ID_PAD = jnp.iinfo(jnp.int32).max
 
 
 def _eval_kernel(
@@ -100,32 +103,12 @@ def _eval_kernel(
     gt_scr[...] += jnp.sum((s > tgt).astype(jnp.int32), axis=-1)
     eq_scr[...] += jnp.sum((s == tgt).astype(jnp.int32), axis=-1)
 
-    # Merge the running top-k buffer with this tile's scores: K rounds of
-    # first-occurrence argmax (ties → earliest concat position → lowest
-    # global id, the dense lax.top_k rule).
-    cat_v = jnp.concatenate([vals_scr[...], s], axis=-1)
-    cat_i = jnp.concatenate([ids_scr[...], col], axis=-1)
-    width = k + s.shape[-1]
-    pos = jax.lax.broadcasted_iota(jnp.int32, cat_v.shape, 1)
-    new_v, new_i = [], []
-    for _ in range(k):
-        m = jnp.max(cat_v, axis=-1, keepdims=True)
-        first = jnp.min(
-            jnp.where(cat_v == m, pos, width), axis=-1, keepdims=True
-        )
-        sel = pos == first
-        sel_id = jnp.sum(jnp.where(sel, cat_i, 0), axis=-1)
-        # Exhausted rows (max == NEG_INF: fewer than k valid columns
-        # seen so far) re-select an already-knocked-out position — emit
-        # the placeholder id instead of a duplicate real id, matching
-        # the reference's lax.top_k (which keeps the id-padded buffer
-        # slots, the lowest-indexed members of the NEG_INF tie group).
-        exhausted = m[:, 0] == NEG_INF
-        new_v.append(jnp.max(jnp.where(sel, cat_v, NEG_INF), axis=-1))
-        new_i.append(jnp.where(exhausted, _ID_PAD, sel_id))
-        cat_v = jnp.where(sel, NEG_INF, cat_v)
-    vals_scr[...] = jnp.stack(new_v, axis=-1)
-    ids_scr[...] = jnp.stack(new_i, axis=-1)
+    # Merge the running top-k buffer with this tile's scores — the shared
+    # first-occurrence-argmax recurrence (ties → earliest concat position
+    # → lowest global id, the dense lax.top_k rule; see topk_merge.py).
+    vals_scr[...], ids_scr[...] = merge_topk_tile(
+        vals_scr[...], ids_scr[...], s, col, k
+    )
 
     @pl.when(j == n_c_tiles - 1)
     def _finalize():

@@ -13,8 +13,10 @@ import jax.numpy as jnp
 
 from repro.kernels import eval_topk as _eval_topk
 from repro.kernels import fused_ce as _fused_ce
+from repro.kernels import mips_topk as _mips_topk
 from repro.kernels import ref as _ref
 from repro.kernels import sce_bucket as _sce_bucket
+from repro.kernels import sce_prefetch as _sce_prefetch
 
 
 def _interpret_default() -> bool:
@@ -74,6 +76,91 @@ def sce_bucket_plse(
         return _ref.sce_bucket_plse_ref(x_b, y_b, tgt_b, cand_ids)
     return _sce_bucket.sce_bucket_plse(
         x_b, y_b, tgt_b, cand_ids, block_bx, block_by, interpret
+    )
+
+
+def mips_topk(
+    q,
+    y,
+    k: int,
+    *,
+    valid=None,
+    block_q: int = 128,
+    block_c: int = 512,
+    id_offset: int = 0,
+    interpret: bool | None = None,
+):
+    """Streaming per-row MIPS top-k of ``q @ yᵀ`` →
+    ``(vals (n_q, k), ids (n_q, k))`` without the ``(n_q, C)`` score
+    matrix. See kernels/mips_topk.py; inside ``shard_map`` (or with a
+    traced ``id_offset``) the chunked pure-jnp reference runs instead —
+    same outputs and ``lax.top_k`` tie rule."""
+    if interpret is None:
+        interpret = _interpret_default()
+    traced_offset = not isinstance(id_offset, int)
+    if traced_offset or (interpret and _inside_shard_map(q, y)):
+        return _ref.mips_topk_ref(
+            q, y, k, valid=valid, chunk=block_c, id_offset=id_offset
+        )
+    return _mips_topk.mips_topk(
+        q, y, k,
+        valid=valid, block_q=block_q, block_c=block_c,
+        id_offset=id_offset, interpret=interpret,
+    )
+
+
+def sce_gather_loss(
+    x_b,
+    y,
+    idx_y,
+    tgt_b,
+    cand_ids,
+    pos_logit,
+    *,
+    block_bx: int = 128,
+    block_by: int = 256,
+    interpret: bool | None = None,
+):
+    """Fused scalar-prefetch in-bucket SCE losses (n_b, b_x): candidate
+    rows are gathered from the full ``y`` (C, d) table on the fly via
+    ``idx_y`` — the ``(n_b, b_y, d)`` HBM candidate tensor and its VJP
+    scatter never exist. See kernels/sce_prefetch.py. Inside
+    ``shard_map`` on non-TPU backends the take + pure-jnp oracle runs
+    instead (numerically identical; the gather materializes there)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if interpret and _inside_shard_map(x_b, y, pos_logit):
+        y_b = jnp.take(y, jnp.clip(idx_y, 0, y.shape[0] - 1), axis=0)
+        return _ref.sce_bucket_loss_ref(x_b, y_b, tgt_b, cand_ids, pos_logit)
+    return _sce_prefetch.sce_gather_loss(
+        x_b, y, idx_y, tgt_b, cand_ids, pos_logit,
+        block_bx, block_by, interpret,
+    )
+
+
+def sce_gather_plse(
+    x_b,
+    y,
+    idx_y,
+    tgt_b,
+    cand_ids,
+    *,
+    block_bx: int = 128,
+    block_by: int = 256,
+    interpret: bool | None = None,
+):
+    """Scalar-prefetch partial in-bucket logsumexp (n_b, b_x) — the
+    distributed-merge building block with on-the-fly candidate gather
+    (candidates with negative ``cand_ids`` are masked: padding or
+    other-shard-owned rows). Same shard_map fallback as
+    :func:`sce_gather_loss`."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if interpret and _inside_shard_map(x_b, y):
+        y_b = jnp.take(y, jnp.clip(idx_y, 0, y.shape[0] - 1), axis=0)
+        return _ref.sce_bucket_plse_ref(x_b, y_b, tgt_b, cand_ids)
+    return _sce_prefetch.sce_gather_plse(
+        x_b, y, idx_y, tgt_b, cand_ids, block_bx, block_by, interpret
     )
 
 

@@ -12,6 +12,21 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def _masked_neg_logits(x_b, y_b, tgt_b, cand_ids):
+    """Collision- and validity-masked in-bucket negative logits (f32).
+
+    Candidates equal to the position's target are not negatives;
+    candidates with a NEGATIVE id are invalid slots (padding, or — in
+    the distributed ids-only exact mode — candidates owned by another
+    catalog shard) and are masked for every position.
+    """
+    f32 = jnp.float32
+    neg = jnp.einsum("nxd,nyd->nxy", x_b.astype(f32), y_b.astype(f32))
+    collide = cand_ids[:, None, :] == tgt_b[:, :, None]
+    invalid = jnp.logical_or(collide, (cand_ids < 0)[:, None, :])
+    return jnp.where(invalid, NEG_INF, neg)
+
+
 def sce_bucket_loss_ref(
     x_b: jax.Array,  # (n_b, b_x, d)
     y_b: jax.Array,  # (n_b, b_y, d)
@@ -22,14 +37,11 @@ def sce_bucket_loss_ref(
     """In-bucket CE (Algorithm 1, lines 12–15). Returns (n_b, b_x) losses.
 
     ``loss = logsumexp([pos, negs]) - pos`` with candidates equal to the
-    position's target masked out of the negative set.
+    position's target (or carrying a negative = invalid id) masked out
+    of the negative set.
     """
     f32 = jnp.float32
-    neg = jnp.einsum(
-        "nxd,nyd->nxy", x_b.astype(f32), y_b.astype(f32)
-    )
-    collide = cand_ids[:, None, :] == tgt_b[:, :, None]
-    neg = jnp.where(collide, NEG_INF, neg)
+    neg = _masked_neg_logits(x_b, y_b, tgt_b, cand_ids)
     pos = pos_logit.astype(f32)
     m = jnp.maximum(jnp.max(neg, axis=-1), pos)
     s = jnp.sum(jnp.exp(neg - m[..., None]), axis=-1) + jnp.exp(pos - m)
@@ -42,15 +54,71 @@ def sce_bucket_plse_ref(
     tgt_b: jax.Array,  # (n_b, b_x) int32
     cand_ids: jax.Array,  # (n_b, b_y) int32
 ) -> jax.Array:
-    """Partial logsumexp over in-bucket negatives (collision-masked, no
-    positive term) — the union-mode building block. → (n_b, b_x) f32."""
-    f32 = jnp.float32
-    neg = jnp.einsum("nxd,nyd->nxy", x_b.astype(f32), y_b.astype(f32))
-    collide = cand_ids[:, None, :] == tgt_b[:, :, None]
-    neg = jnp.where(collide, NEG_INF, neg)
+    """Partial logsumexp over in-bucket negatives (collision- and
+    validity-masked, no positive term) — the building block of the
+    distributed partial-merge modes. → (n_b, b_x) f32."""
+    neg = _masked_neg_logits(x_b, y_b, tgt_b, cand_ids)
     m = jnp.max(neg, axis=-1)
     s = jnp.sum(jnp.exp(neg - m[..., None]), axis=-1)
     return m + jnp.log(jnp.maximum(s, 1e-30))
+
+
+def mips_topk_ref(
+    q: jax.Array,  # (n_q, d) bucket centers
+    y: jax.Array,  # (C, d) catalog (or model outputs, or a shard)
+    k: int,
+    *,
+    valid=None,  # optional (C,) bool — rows never selected when False
+    chunk: int = 512,
+    id_offset=0,
+):
+    """Chunked streaming MIPS top-k — pure-jnp reference for
+    ``kernels/mips_topk.py`` (and the path used inside ``shard_map``,
+    where interpret-mode Pallas cannot run — see ``kernels/ops.py``).
+
+    ``lax.scan`` over ``(chunk, d)`` catalog slices carrying only the
+    ``(n_q, k)`` value/id merge buffers; peak live score elements are
+    ``O(n_q·(k + chunk))`` rather than ``O(n_q·C)``. Same outputs and
+    tie rule as the kernel and as a dense masked ``lax.top_k``: each
+    chunk merge concatenates the (id-ascending) running buffer before
+    the new (id-ascending) columns and ``lax.top_k`` is stable, so ties
+    resolve toward the lower global id.
+    """
+    n_q, _ = q.shape
+    c = y.shape[0]
+    k = min(k, c)
+    chunk = min(chunk, c)
+    pad = (-c) % chunk
+    yp = jnp.pad(y, ((0, pad), (0, 0)))
+    if valid is None:
+        valid = jnp.ones((c,), bool)
+    vp = jnp.pad(valid.astype(bool), (0, pad))
+    n_chunks = (c + pad) // chunk
+    f32 = jnp.float32
+    q32 = q.astype(f32)
+
+    vals0 = jnp.full((n_q, k), NEG_INF, f32)
+    ids0 = jnp.full((n_q, k), jnp.iinfo(jnp.int32).max, jnp.int32)
+
+    def body(carry, jc):
+        vals, ids = carry
+        rows = jax.lax.dynamic_slice_in_dim(yp, jc * chunk, chunk, 0)
+        ok = jax.lax.dynamic_slice_in_dim(vp, jc * chunk, chunk, 0)
+        s = q32 @ rows.astype(f32).T  # (n_q, chunk)
+        idx = jc * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        ok = jnp.logical_and(ok, idx < c)
+        s = jnp.where(ok[None, :], s, NEG_INF)
+        col = jnp.broadcast_to((id_offset + idx)[None, :], s.shape)
+        cat_v = jnp.concatenate([vals, s], axis=-1)
+        cat_i = jnp.concatenate([ids, col], axis=-1)
+        v, sel = jax.lax.top_k(cat_v, k)
+        i = jnp.take_along_axis(cat_i, sel, axis=-1)
+        return (v, i), None
+
+    (vals, ids), _ = jax.lax.scan(
+        body, (vals0, ids0), jnp.arange(n_chunks)
+    )
+    return vals, ids
 
 
 def eval_topk_ref(

@@ -63,13 +63,18 @@ def _fwd_kernel(
     y = y_ref[0]
     logits = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
 
-    # Mask (a) candidates that ARE the positive class (not negatives) and
-    # (b) padded tail columns beyond the true b_y.
+    # Mask (a) candidates that ARE the positive class (not negatives),
+    # (b) candidates with a negative = invalid id (padding, or rows owned
+    # by another catalog shard in the distributed ids-only exact mode),
+    # and (c) padded tail columns beyond the true b_y.
     col_ids = j * block_by + jax.lax.broadcasted_iota(
         jnp.int32, logits.shape, 1
     )
     collide = cand_ref[0][None, :] == tgt_ref[0][:, None]
-    invalid = jnp.logical_or(collide, col_ids >= by_actual)
+    invalid = jnp.logical_or(
+        jnp.logical_or(collide, cand_ref[0][None, :] < 0),
+        col_ids >= by_actual,
+    )
     logits = jnp.where(invalid, NEG_INF, logits)
 
     m_prev = m_scr[...]
@@ -121,7 +126,10 @@ def _fwd_plse_kernel(
         jnp.int32, logits.shape, 1
     )
     collide = cand_ref[0][None, :] == tgt_ref[0][:, None]
-    invalid = jnp.logical_or(collide, col_ids >= by_actual)
+    invalid = jnp.logical_or(
+        jnp.logical_or(collide, cand_ref[0][None, :] < 0),
+        col_ids >= by_actual,
+    )
     logits = jnp.where(invalid, NEG_INF, logits)
 
     m_prev, s_prev = m_scr[...], s_scr[...]
@@ -168,7 +176,10 @@ def _bwd_dx_kernel(
         jnp.int32, logits.shape, 1
     )
     collide = cand_ref[0][None, :] == tgt_ref[0][:, None]
-    invalid = jnp.logical_or(collide, col_ids >= by_actual)
+    invalid = jnp.logical_or(
+        jnp.logical_or(collide, cand_ref[0][None, :] < 0),
+        col_ids >= by_actual,
+    )
     p = jnp.where(invalid, 0.0, jnp.exp(logits - lse_ref[0][:, None]))
     gw = p * g_ref[0][:, None].astype(jnp.float32)  # dL/dlogit tile
     acc_scr[...] += jnp.dot(
@@ -214,7 +225,10 @@ def _bwd_dy_kernel(
         jnp.int32, logits.shape, 1
     )
     collide = cand_ref[0][None, :] == tgt_ref[0][:, None]
-    invalid = jnp.logical_or(collide, col_ids >= by_actual)
+    invalid = jnp.logical_or(
+        jnp.logical_or(collide, cand_ref[0][None, :] < 0),
+        col_ids >= by_actual,
+    )
     p = jnp.where(invalid, 0.0, jnp.exp(logits - lse_ref[0][:, None]))
     gw = p * g_ref[0][:, None].astype(jnp.float32)
     acc_scr[...] += jnp.dot(

@@ -1,0 +1,516 @@
+"""Scalar-prefetch fused candidate gather + in-bucket SCE — Pallas TPU.
+
+``kernels/sce_bucket.py`` fused the bucket-logit tensor away but still
+takes the gathered candidate embeddings ``y_b = Y[idx_y]`` as an HBM
+input — a ``(n_b, b_y, d)`` tensor written by an XLA gather whose VJP
+scatter-adds into a ``(C, d)`` zeros buffer every step. These variants
+close that last materialization: they take ``idx_y`` as a
+*scalar-prefetch* operand (``pltpu.PrefetchScalarGridSpec``) plus the
+full catalog table ``Y (C, d)``, and let the Pallas pipeline DMA each
+candidate row ``Y[idx_y[n, j]]`` straight into VMEM — the index map of
+the row operand reads the prefetched ``idx_y``, which is exactly what
+scalar prefetch exists for.
+
+Layout: the innermost grid dimension walks candidates one row at a
+time; rows accumulate in a ``(block_by, d)`` VMEM gather scratch, and
+every ``block_by``-th step the tile is complete and one MXU matmul
+updates the carried recurrence — the same online-logsumexp (forward) /
+recomputed-softmax contraction (backward) as ``sce_bucket``, at the
+same ``(block_bx × block_by)`` MXU tile shape. Candidate HBM traffic is
+``n_bx · b_y · d`` reads per bucket (rows re-streamed once per ``b_x``
+tile — the same tiling ``sce_bucket`` pays for ``y_b``); the ``y_b``
+tensor itself is never written or read back.
+
+Backward ``dY`` transposes the grid (``b_x`` innermost) and accumulates
+each candidate row's gradient **directly into the (C, d) output** at
+row ``idx_y[n, j]`` — the output block spec is itself gather-indexed,
+and a zeros ``(C, d)`` operand aliased to the output
+(``input_output_aliases``) makes the read-modify-write accumulation
+well-defined. The XLA scatter-add disappears. Revisit rule: rows within
+one bucket are distinct (top-k) and padded tail slots repeat the
+bucket's LAST real row (keeping the output block resident instead of
+bouncing to an arbitrary row), so the same output row recurs only
+across buckets. Adjacent buckets CAN share a candidate (duplicate rows,
+hot items), making the re-fetch as little as one grid step after the
+flush — sequentially correct (and what interpret mode executes), but on
+real TPU it requires Mosaic to order the aliased output's write-back
+before the revisit read; validating that on hardware is the ROADMAP
+item (see KERNELS.md §sce_prefetch).
+
+Masking follows ``sce_bucket`` plus one rule: candidates with a
+NEGATIVE id in ``cand_ids`` are invalid for *every* position — padding
+slots, and (in the distributed ids-only exact mode) candidates owned by
+another catalog shard, whose partial LSE is computed at home and merged
+by psum.
+
+Selection indices are non-differentiable; ``idx_y``/``tgt_b``/
+``cand_ids`` get no cotangent.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.sce_bucket import _pad_to, _sds
+
+NEG_INF = -1e30
+
+
+def _tile_mask(cand_tile, tgt_row, jt, block_by, by_actual):
+    """(block_bx, block_by) invalid mask for one candidate tile."""
+    col_ids = jt * block_by + jax.lax.broadcasted_iota(
+        jnp.int32, (tgt_row.shape[0], block_by), 1
+    )
+    collide = cand_tile[None, :] == tgt_row[:, None]
+    return jnp.logical_or(
+        jnp.logical_or(collide, cand_tile[None, :] < 0),
+        col_ids >= by_actual,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Forward (loss and partial-LSE flavours share one body)
+# ---------------------------------------------------------------------------
+def _gfwd_kernel(
+    idx_ref,  # (n_b, by_p) i32 scalar-prefetch — rows of Y to gather
+    *refs,
+    n_by_steps: int,
+    by_actual: int,
+    block_by: int,
+    with_pos: bool,
+):
+    del idx_ref  # consumed by the index maps
+    if with_pos:
+        (tgt_ref, cand_ref, pos_ref, x_ref, yrow_ref,
+         loss_ref, lse_ref, gather_scr, m_scr, s_scr) = refs
+    else:
+        (tgt_ref, cand_ref, x_ref, yrow_ref,
+         lse_ref, gather_scr, m_scr, s_scr) = refs
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        if with_pos:
+            # Fold the positive into the accumulator (KERNELS.md
+            # §sce_bucket): m = pos, s = exp(pos - pos) = 1.
+            pos = pos_ref[0].astype(jnp.float32)
+            m_scr[...] = pos
+            s_scr[...] = jnp.ones_like(pos)
+        else:
+            m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+            s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = j % block_by
+    gather_scr[pl.ds(r, 1), :] = yrow_ref[...]
+
+    @pl.when(r == block_by - 1)
+    def _tile():
+        x = x_ref[0]
+        logits = jnp.dot(
+            x, gather_scr[...].T, preferred_element_type=jnp.float32
+        )
+        invalid = _tile_mask(
+            cand_ref[0], tgt_ref[0], j // block_by, block_by, by_actual
+        )
+        logits = jnp.where(invalid, NEG_INF, logits)
+        m_prev, s_prev = m_scr[...], s_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+        s_scr[...] = s_prev * jnp.exp(m_prev - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[:, None]), axis=-1
+        )
+        m_scr[...] = m_new
+
+    @pl.when(j == n_by_steps - 1)
+    def _finalize():
+        m, s = m_scr[...], s_scr[...]
+        if with_pos:
+            lse = m + jnp.log(s)
+            lse_ref[0] = lse.astype(lse_ref.dtype)
+            loss_ref[0] = (lse - pos_ref[0].astype(jnp.float32)).astype(
+                loss_ref.dtype
+            )
+        else:
+            lse_ref[0] = (m + jnp.log(jnp.maximum(s, 1e-30))).astype(
+                lse_ref.dtype
+            )
+
+
+# ---------------------------------------------------------------------------
+# Backward dX — same grid as forward; gather tile + recomputed softmax
+# ---------------------------------------------------------------------------
+def _gbwd_dx_kernel(
+    idx_ref,
+    tgt_ref,
+    cand_ref,
+    lse_ref,  # (1, bx_t) f32
+    g_ref,  # (1, bx_t) upstream cotangent
+    x_ref,
+    yrow_ref,
+    dx_ref,  # (1, bx_t, d) out
+    gather_scr,  # (by_t, d)
+    acc_scr,  # (bx_t, d) f32
+    *,
+    n_by_steps: int,
+    by_actual: int,
+    block_by: int,
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    r = j % block_by
+    gather_scr[pl.ds(r, 1), :] = yrow_ref[...]
+
+    @pl.when(r == block_by - 1)
+    def _tile():
+        x = x_ref[0]
+        tile = gather_scr[...]
+        logits = jnp.dot(x, tile.T, preferred_element_type=jnp.float32)
+        invalid = _tile_mask(
+            cand_ref[0], tgt_ref[0], j // block_by, block_by, by_actual
+        )
+        p = jnp.where(invalid, 0.0, jnp.exp(logits - lse_ref[0][:, None]))
+        gw = p * g_ref[0][:, None].astype(jnp.float32)
+        acc_scr[...] += jnp.dot(
+            gw.astype(tile.dtype), tile, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(j == n_by_steps - 1)
+    def _finalize():
+        dx_ref[0] = acc_scr[...].astype(dx_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Backward dY — transposed grid (b_x innermost), gather-indexed OUTPUT:
+# each candidate's row gradient accumulates straight into dY[idx_y[n, j]]
+# ---------------------------------------------------------------------------
+def _gbwd_dy_kernel(
+    idx_ref,  # (n_b, by_p) i32 scalar-prefetch (drives the OUT index map)
+    cand_ref,  # (n_b, by_p) i32 scalar-prefetch (mask values)
+    tgt_ref,  # (1, bx_t) i32
+    lse_ref,  # (1, bx_t) f32
+    g_ref,  # (1, bx_t)
+    x_ref,  # (1, bx_t, d)
+    yrow_ref,  # (1, d) gathered candidate row (for logit recompute)
+    dyz_ref,  # (1, d) — aliased zeros view of the same output row
+    dy_ref,  # (1, d) out — row idx_y[n, j] of the (C, d) gradient
+    acc_scr,  # (1, d) f32
+    *,
+    n_bx_tiles: int,
+    by_actual: int,
+):
+    n = pl.program_id(0)
+    jy = pl.program_id(1)
+    ix = pl.program_id(2)
+    del dyz_ref  # present only to pin the zeros aliasing
+
+    @pl.when(ix == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0]  # (bx_t, d)
+    y_vec = yrow_ref[0]  # (d,)
+    col = jnp.dot(x, y_vec, preferred_element_type=jnp.float32)  # (bx_t,)
+    cand_v = cand_ref[n, jy]
+    invalid = jnp.logical_or(
+        jnp.logical_or(cand_v < 0, jy >= by_actual),
+        tgt_ref[0] == cand_v,
+    )
+    p = jnp.where(invalid, 0.0, jnp.exp(col - lse_ref[0]))
+    gw = p * g_ref[0].astype(jnp.float32)  # (bx_t,)
+    acc_scr[...] += jnp.dot(
+        gw[None, :].astype(x.dtype), x, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ix == n_bx_tiles - 1)
+    def _flush():
+        # Read-modify-write into the resident (1, d) output block; the
+        # aliased zeros operand defines the initial value, and earlier
+        # buckets' contributions to the same catalog row are re-read on
+        # revisit (revisits are ≥ b_y grid steps apart — see module doc).
+        dy_ref[...] += acc_scr[...].astype(dy_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+def _prep(x_b, y, idx_y, tgt_b, cand_ids, block_bx, block_by):
+    n_b, b_x, d = x_b.shape
+    b_y = idx_y.shape[1]
+    c = y.shape[0]
+    block_bx = min(block_bx, b_x)
+    block_by = min(block_by, b_y)
+
+    xp = _pad_to(x_b, 1, block_bx)
+    tp = _pad_to(tgt_b, 1, block_bx, value=-2)
+    # Padded gather slots repeat the bucket's LAST real row (edge pad):
+    # any in-range row works for the masked forward, but the dY kernel's
+    # gather-indexed output stays resident on the same block instead of
+    # inserting short-distance RMW revisits of an arbitrary row. The
+    # cand-id pad of -1 masks the slots either way.
+    pad_by = (-idx_y.shape[1]) % max(block_by, 1)
+    ip = jnp.clip(
+        jnp.pad(idx_y, ((0, 0), (0, pad_by)), mode="edge"), 0, c - 1
+    ).astype(jnp.int32)
+    cp = _pad_to(cand_ids, 1, block_by, value=-1).astype(jnp.int32)
+    bx_p, by_p = xp.shape[1], ip.shape[1]
+    return (
+        xp, tp, ip, cp,
+        dict(
+            n_b=n_b, b_x=b_x, b_y=b_y, d=d, c=c,
+            block_bx=block_bx, block_by=block_by,
+            bx_p=bx_p, by_p=by_p,
+            n_bx=bx_p // block_bx,
+        ),
+    )
+
+
+def _gfwd(x_b, y, idx_y, tgt_b, cand_ids, pos_logit, *, block_bx, block_by,
+          interpret, with_pos):
+    xp, tp, ip, cp, s = _prep(
+        x_b, y, idx_y, tgt_b, cand_ids, block_bx, block_by
+    )
+    d, by_p, bx_p = s["d"], s["by_p"], s["bx_p"]
+    block_bx, block_by = s["block_bx"], s["block_by"]
+
+    kernel = functools.partial(
+        _gfwd_kernel,
+        n_by_steps=by_p,
+        by_actual=s["b_y"],
+        block_by=block_by,
+        with_pos=with_pos,
+    )
+    in_specs = [
+        pl.BlockSpec((1, block_bx), lambda n, i, j, idx: (n, i)),  # tgt
+        pl.BlockSpec(  # cand tile for the running b_y tile
+            (1, block_by), lambda n, i, j, idx: (n, j // block_by)
+        ),
+    ]
+    inputs = [tp, cp]
+    if with_pos:
+        pp = _pad_to(pos_logit, 1, block_bx)
+        in_specs.append(
+            pl.BlockSpec((1, block_bx), lambda n, i, j, idx: (n, i))
+        )
+        inputs.append(pp)
+    in_specs += [
+        pl.BlockSpec((1, block_bx, d), lambda n, i, j, idx: (n, i, 0)),
+        pl.BlockSpec((1, d), lambda n, i, j, idx: (idx[n, j], 0)),  # gather
+    ]
+    inputs += [xp, y]
+
+    row_spec = pl.BlockSpec((1, block_bx), lambda n, i, j, idx: (n, i))
+    if with_pos:  # (loss, lse) vs plse-only (lse)
+        out_specs = [row_spec, row_spec]
+        out_shape = [
+            _sds((s["n_b"], bx_p), pos_logit.dtype, *inputs),
+            _sds((s["n_b"], bx_p), jnp.float32, *inputs),
+        ]
+    else:
+        out_specs = [row_spec]
+        out_shape = [_sds((s["n_b"], bx_p), jnp.float32, *inputs)]
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(s["n_b"], s["n_bx"], by_p),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=[
+                pltpu.VMEM((block_by, d), y.dtype),
+                pltpu.VMEM((block_bx,), jnp.float32),
+                pltpu.VMEM((block_bx,), jnp.float32),
+            ],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(ip, *inputs)
+    if with_pos:
+        loss, lse = out
+        return loss[:, : s["b_x"]], lse[:, : s["b_x"]]
+    return out[0][:, : s["b_x"]]
+
+
+def _gbwd(x_b, y, idx_y, tgt_b, cand_ids, lse, g, *, block_bx, block_by,
+          interpret):
+    xp, tp, ip, cp, s = _prep(
+        x_b, y, idx_y, tgt_b, cand_ids, block_bx, block_by
+    )
+    d, by_p, bx_p = s["d"], s["by_p"], s["bx_p"]
+    block_bx, block_by = s["block_bx"], s["block_by"]
+    lp = _pad_to(lse, 1, block_bx)
+    gp = _pad_to(g, 1, block_bx)  # zero cotangent on padded rows
+
+    dx = pl.pallas_call(
+        functools.partial(
+            _gbwd_dx_kernel,
+            n_by_steps=by_p,
+            by_actual=s["b_y"],
+            block_by=block_by,
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(s["n_b"], s["n_bx"], by_p),
+            in_specs=[
+                pl.BlockSpec((1, block_bx), lambda n, i, j, idx: (n, i)),
+                pl.BlockSpec(
+                    (1, block_by), lambda n, i, j, idx: (n, j // block_by)
+                ),
+                pl.BlockSpec((1, block_bx), lambda n, i, j, idx: (n, i)),
+                pl.BlockSpec((1, block_bx), lambda n, i, j, idx: (n, i)),
+                pl.BlockSpec((1, block_bx, d), lambda n, i, j, idx: (n, i, 0)),
+                pl.BlockSpec((1, d), lambda n, i, j, idx: (idx[n, j], 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, block_bx, d), lambda n, i, j, idx: (n, i, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((block_by, d), y.dtype),
+                pltpu.VMEM((block_bx, d), jnp.float32),
+            ],
+        ),
+        out_shape=_sds((s["n_b"], bx_p, d), x_b.dtype, xp, y, lp, gp),
+        interpret=interpret,
+    )(ip, tp, cp, lp, gp, xp, y)
+
+    # dY: transposed grid, gather-indexed output, zeros-aliased RMW.
+    dy_zero = jnp.zeros_like(y)
+    dy = pl.pallas_call(
+        functools.partial(
+            _gbwd_dy_kernel,
+            n_bx_tiles=s["n_bx"],
+            by_actual=s["b_y"],
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # idx_y (index maps) + cand_ids (values)
+            grid=(s["n_b"], by_p, s["n_bx"]),
+            in_specs=[
+                pl.BlockSpec((1, block_bx), lambda n, j, i, idx, cand: (n, i)),
+                pl.BlockSpec((1, block_bx), lambda n, j, i, idx, cand: (n, i)),
+                pl.BlockSpec((1, block_bx), lambda n, j, i, idx, cand: (n, i)),
+                pl.BlockSpec(
+                    (1, block_bx, d), lambda n, j, i, idx, cand: (n, i, 0)
+                ),
+                pl.BlockSpec(
+                    (1, d), lambda n, j, i, idx, cand: (idx[n, j], 0)
+                ),
+                pl.BlockSpec(  # zeros operand aliased to the output
+                    (1, d), lambda n, j, i, idx, cand: (idx[n, j], 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, d), lambda n, j, i, idx, cand: (idx[n, j], 0)
+            ),
+            scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+        ),
+        out_shape=_sds((s["c"], d), y.dtype, xp, y, lp, gp),
+        # operand 7 = dy_zero (after the 2 prefetch args and 5 inputs).
+        input_output_aliases={7: 0},
+        interpret=interpret,
+    )(ip, cp, tp, lp, gp, xp, y, dy_zero)
+
+    return dx[:, : s["b_x"]], dy
+
+
+# ---------------------------------------------------------------------------
+# Public ops with custom VJP
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def sce_gather_loss(
+    x_b,
+    y,
+    idx_y,
+    tgt_b,
+    cand_ids,
+    pos_logit,
+    block_bx: int = 128,
+    block_by: int = 256,
+    interpret: bool = False,
+):
+    """Fused in-bucket SCE losses with on-the-fly candidate gather:
+    ``(n_b, b_x)`` per-(bucket, position) CE from ``x_b`` and the FULL
+    catalog ``y (C, d)`` + gather rows ``idx_y (n_b, b_y)``. Matches
+    ``ref.sce_bucket_loss_ref(x_b, y[idx_y], tgt_b, cand_ids, pos)``;
+    the ``(n_b, b_y, d)`` candidate tensor never exists, and ``dY``
+    lands directly in a ``(C, d)`` buffer (no gather-VJP scatter)."""
+    loss, _ = _gfwd(
+        x_b, y, idx_y, tgt_b, cand_ids, pos_logit,
+        block_bx=block_bx, block_by=block_by, interpret=interpret,
+        with_pos=True,
+    )
+    return loss
+
+
+def _loss_vjp_fwd(x_b, y, idx_y, tgt_b, cand_ids, pos_logit, block_bx,
+                  block_by, interpret):
+    loss, lse = _gfwd(
+        x_b, y, idx_y, tgt_b, cand_ids, pos_logit,
+        block_bx=block_bx, block_by=block_by, interpret=interpret,
+        with_pos=True,
+    )
+    return loss, (x_b, y, idx_y, tgt_b, cand_ids, pos_logit, lse)
+
+
+def _loss_vjp_bwd(block_bx, block_by, interpret, res, g):
+    x_b, y, idx_y, tgt_b, cand_ids, pos_logit, lse = res
+    dx, dy = _gbwd(
+        x_b, y, idx_y, tgt_b, cand_ids, lse, g,
+        block_bx=block_bx, block_by=block_by, interpret=interpret,
+    )
+    p_pos = jnp.exp(pos_logit.astype(jnp.float32) - lse)
+    d_pos = ((p_pos - 1.0) * g.astype(jnp.float32)).astype(pos_logit.dtype)
+    return dx, dy, None, None, None, d_pos
+
+
+sce_gather_loss.defvjp(_loss_vjp_fwd, _loss_vjp_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def sce_gather_plse(
+    x_b,
+    y,
+    idx_y,
+    tgt_b,
+    cand_ids,
+    block_bx: int = 128,
+    block_by: int = 256,
+    interpret: bool = False,
+):
+    """Partial in-bucket logsumexp with on-the-fly candidate gather —
+    ``(n_b, b_x)`` f32, the distributed-merge building block. Matches
+    ``ref.sce_bucket_plse_ref(x_b, y[idx_y], tgt_b, cand_ids)`` with
+    negative ``cand_ids`` masked (padding / other-shard-owned)."""
+    return _gfwd(
+        x_b, y, idx_y, tgt_b, cand_ids, None,
+        block_bx=block_bx, block_by=block_by, interpret=interpret,
+        with_pos=False,
+    )
+
+
+def _plse_vjp_fwd(x_b, y, idx_y, tgt_b, cand_ids, block_bx, block_by,
+                  interpret):
+    lse = _gfwd(
+        x_b, y, idx_y, tgt_b, cand_ids, None,
+        block_bx=block_bx, block_by=block_by, interpret=interpret,
+        with_pos=False,
+    )
+    return lse, (x_b, y, idx_y, tgt_b, cand_ids, lse)
+
+
+def _plse_vjp_bwd(block_bx, block_by, interpret, res, g):
+    x_b, y, idx_y, tgt_b, cand_ids, lse = res
+    dx, dy = _gbwd(
+        x_b, y, idx_y, tgt_b, cand_ids, lse, g,
+        block_bx=block_bx, block_by=block_by, interpret=interpret,
+    )
+    return dx, dy, None, None, None
+
+
+sce_gather_plse.defvjp(_plse_vjp_fwd, _plse_vjp_bwd)

@@ -1,0 +1,87 @@
+"""Shared streaming top-k merge recurrence (Mosaic-friendly, sort-free).
+
+Both streaming top-k kernels — ``kernels/eval_topk.py`` (evaluation
+rank-and-topk) and ``kernels/mips_topk.py`` (SCE candidate selection) —
+carry a ``(rows, K)`` running buffer across catalog tiles and merge each
+tile's scores into it. Mosaic has no general sort, so the merge is ``K``
+unrolled rounds of *first-occurrence argmax* built from
+max/min/where/iota only: find the row max over the ``(K + tile)``-wide
+concatenation of buffer and tile, locate its earliest position, emit
+``(val, id)``, knock the position out with ``NEG_INF``, repeat.
+
+Tie rule (the load-bearing property): ties resolve toward the earliest
+concatenation position. Because the running buffer is kept in
+descending-value / ascending-id-within-ties order and tiles arrive in
+ascending-global-id order, the earliest position among equal values is
+always the lowest global id — by induction over merges the final
+selection is *bit-identical to a dense* ``lax.top_k`` (lowest index wins
+among ties). ``dist.collectives.distributed_topk`` guarantees the same
+rule, so dense, streaming, and sharded selections agree exactly.
+
+Exhausted rows (max == ``NEG_INF``: fewer than ``K`` valid columns seen
+so far) emit the ``ID_PAD`` placeholder instead of a duplicate real id,
+matching what ``lax.top_k`` leaves in the id-padded buffer slots.
+
+Cost note: the merge is ``O(K·(K + tile))`` VPU work per tile per row
+block and unrolls ``K`` rounds into the program — cheap for eval-sized
+``K`` (≤ ~100), noticeable program growth for selection-sized
+``K = b_y`` (256+). The matmul producing the tile still dominates on
+TPU for ``d ≳ K``; revisit with a bitonic partial sort if it ever shows
+up in profiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+ID_PAD = jnp.iinfo(jnp.int32).max
+
+
+def merge_topk_tile(vals, ids, tile_vals, tile_ids, k: int):
+    """Merge one tile of scores into the running top-k buffer.
+
+    Parameters
+    ----------
+    vals : (rows, k) f32
+        Running top-k values, descending; ``NEG_INF`` in unfilled slots.
+    ids : (rows, k) i32
+        Matching ids; ``ID_PAD`` in unfilled slots.
+    tile_vals : (rows, t) f32
+        This tile's scores, already masked (``NEG_INF`` on invalid
+        columns).
+    tile_ids : (rows, t) i32
+        Global ids of the tile columns, ascending.
+    k : int
+        Buffer width (static).
+
+    Returns
+    -------
+    (vals', ids') : the merged ``(rows, k)`` buffer, same invariants.
+    """
+    cat_v = jnp.concatenate([vals, tile_vals], axis=-1)
+    cat_i = jnp.concatenate([ids, tile_ids], axis=-1)
+    width = k + tile_vals.shape[-1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, cat_v.shape, 1)
+    new_v, new_i = [], []
+    for _ in range(k):
+        m = jnp.max(cat_v, axis=-1, keepdims=True)
+        first = jnp.min(
+            jnp.where(cat_v == m, pos, width), axis=-1, keepdims=True
+        )
+        sel = pos == first
+        sel_id = jnp.sum(jnp.where(sel, cat_i, 0), axis=-1)
+        exhausted = m[:, 0] == NEG_INF
+        new_v.append(jnp.max(jnp.where(sel, cat_v, NEG_INF), axis=-1))
+        new_i.append(jnp.where(exhausted, ID_PAD, sel_id))
+        cat_v = jnp.where(sel, NEG_INF, cat_v)
+    return jnp.stack(new_v, axis=-1), jnp.stack(new_i, axis=-1)
+
+
+def streaming_topk_elements(rows: int, k: int, block: int) -> int:
+    """Analytic peak live elements of one streaming top-k pass: a
+    ``(rows, block)`` score tile plus the ``(rows, k)`` value/id merge
+    buffers — ``O(rows·(block + 2k))``, independent of the catalog size.
+    The shared memory model behind ``eval.streaming.eval_peak_elements``
+    and the fused-selection term of ``core.sce.sce_peak_elements``."""
+    return rows * (block + 2 * k)

@@ -146,6 +146,147 @@ def test_sce_bucket_plse_grads(key):
     np.testing.assert_allclose(gk[1], gr[1], rtol=2e-4, atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# Scalar-prefetch gather variants (kernels/sce_prefetch.py): candidates
+# come as (full Y, idx_y) instead of a materialized y_b
+# ---------------------------------------------------------------------------
+def _gather_problem(key, n_b, b_x, b_y, d, c, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    x_b = jax.random.normal(ks[0], (n_b, b_x, d), dtype)
+    y = jax.random.normal(ks[1], (c, d), dtype)
+    idx = jax.random.randint(ks[2], (n_b, b_y), 0, c)
+    tgt = jax.random.randint(ks[3], (n_b, b_x), 0, c)
+    cand = idx.at[:, 0].set(tgt[:, 0])  # real collisions
+    cand = cand.at[:, -1].set(-1)  # and an invalid (masked) slot
+    pos = jax.random.normal(ks[4], (n_b, b_x), dtype)
+    return x_b, y, idx, tgt, cand, pos
+
+
+GATHER_SHAPES = [
+    (2, 16, 24, 8, 100),
+    (3, 100, 50, 16, 257),  # non-divisible everything
+    (1, 8, 40, 4, 40),
+]
+
+
+@pytest.mark.parametrize("shape", GATHER_SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sce_gather_loss_forward(key, shape, dtype):
+    x_b, y, idx, tgt, cand, pos = _gather_problem(key, *shape, dtype)
+    got = ops.sce_gather_loss(
+        x_b, y, idx, tgt, cand, pos,
+        block_bx=16, block_by=16, interpret=True,
+    )
+    want = ref.sce_bucket_loss_ref(
+        x_b, jnp.take(y, idx, axis=0), tgt, cand, pos
+    )
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("shape", GATHER_SHAPES[:2])
+def test_sce_gather_loss_grads(key, shape):
+    """dX streams like the forward; dY accumulates DIRECTLY into the
+    (C, d) buffer (no gather-VJP scatter) — must equal the take-path
+    oracle's scatter-add, including zero rows for unselected items."""
+    x_b, y, idx, tgt, cand, pos = _gather_problem(key, *shape)
+
+    def f_k(x_b, y, pos):
+        return jnp.sum(ops.sce_gather_loss(
+            x_b, y, idx, tgt, cand, pos,
+            block_bx=16, block_by=16, interpret=True,
+        ))
+
+    def f_r(x_b, y, pos):
+        y_b = jnp.take(y, idx, axis=0)
+        return jnp.sum(ref.sce_bucket_loss_ref(x_b, y_b, tgt, cand, pos))
+
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(x_b, y, pos)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(x_b, y, pos)
+    assert gk[1].shape == y.shape  # dY comes out catalog-shaped
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-5)
+    # rows never selected (and not a target) must have exactly zero grad
+    touched = np.zeros(y.shape[0], bool)
+    touched[np.asarray(idx).ravel()] = True
+    np.testing.assert_allclose(np.asarray(gk[1])[~touched], 0.0, atol=0)
+
+
+@pytest.mark.parametrize("shape", GATHER_SHAPES[:2])
+def test_sce_gather_plse_matches_ref(key, shape):
+    x_b, y, idx, tgt, cand, _ = _gather_problem(key, *shape)
+    got = ops.sce_gather_plse(
+        x_b, y, idx, tgt, cand, block_bx=16, block_by=16, interpret=True
+    )
+    want = ref.sce_bucket_plse_ref(
+        x_b, jnp.take(y, idx, axis=0), tgt, cand
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    gk = jax.grad(
+        lambda y: jnp.sum(ops.sce_gather_plse(
+            x_b, y, idx, tgt, cand,
+            block_bx=16, block_by=16, interpret=True,
+        ))
+    )(y)
+    gr = jax.grad(
+        lambda y: jnp.sum(ref.sce_bucket_plse_ref(
+            x_b, jnp.take(y, idx, axis=0), tgt, cand
+        ))
+    )(y)
+    np.testing.assert_allclose(gk, gr, rtol=2e-4, atol=1e-5)
+
+
+def test_sce_gather_duplicate_rows_across_buckets(key):
+    """The dY kernel's RMW accumulation: the same catalog row selected
+    by SEVERAL buckets must receive the SUM of contributions (the
+    revisit case of the gather-indexed output block)."""
+    n_b, b_x, d, c = 4, 8, 8, 30
+    ks = jax.random.split(key, 4)
+    x_b = jax.random.normal(ks[0], (n_b, b_x, d))
+    y = jax.random.normal(ks[1], (c, d))
+    # every bucket selects the SAME candidate rows → maximal revisiting
+    idx = jnp.tile(jnp.arange(12)[None, :], (n_b, 1))
+    tgt = jax.random.randint(ks[2], (n_b, b_x), 12, c)  # no collisions
+    pos = jax.random.normal(ks[3], (n_b, b_x))
+
+    gk = jax.grad(
+        lambda y: jnp.sum(ops.sce_gather_loss(
+            x_b, y, idx, tgt, idx, pos,
+            block_bx=8, block_by=4, interpret=True,
+        ))
+    )(y)
+    gr = jax.grad(
+        lambda y: jnp.sum(ref.sce_bucket_loss_ref(
+            x_b, jnp.take(y, idx, axis=0), tgt, idx, pos
+        ))
+    )(y)
+    np.testing.assert_allclose(gk, gr, rtol=2e-4, atol=1e-5)
+
+
+def test_negative_cand_ids_masked_everywhere(key):
+    """The shared invalid-candidate rule (cand_id < 0): sce_bucket
+    kernel, prefetch kernel and both refs must agree, and the masked
+    slot must contribute no gradient."""
+    x_b, y, idx, tgt, cand, pos = _gather_problem(key, 2, 8, 12, 4, 50)
+    y_b = jnp.take(y, idx, axis=0)
+    a = ref.sce_bucket_loss_ref(x_b, y_b, tgt, cand, pos)
+    b = ops.sce_bucket_loss(x_b, y_b, tgt, cand, pos, interpret=True)
+    c_ = ops.sce_gather_loss(
+        x_b, y, idx, tgt, cand, pos,
+        block_bx=8, block_by=8, interpret=True,
+    )
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+    np.testing.assert_allclose(a, c_, rtol=1e-5)
+    # vs fully-valid cands: masking the last slot must CHANGE the loss
+    cand_all = cand.at[:, -1].set(idx[:, -1])
+    d_ = ref.sce_bucket_loss_ref(x_b, y_b, tgt, cand_all, pos)
+    assert not np.allclose(np.asarray(a), np.asarray(d_))
+
+
 def test_union_mode_partials_compose_to_full_lse(key):
     """Merging per-slice partial LSEs reproduces the full logsumexp —
     the union-mode cross-shard merge identity."""

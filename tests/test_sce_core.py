@@ -145,6 +145,45 @@ def test_valid_mask_excludes_padding(key):
     np.testing.assert_allclose(np.asarray(g)[20:], 0.0, atol=1e-7)
 
 
+def test_end_to_end_kernel_grads_match_jnp_path(key):
+    """Acceptance: the fully-fused path (mips_topk selection +
+    scalar-prefetch gather loss) must produce the same sce_loss VALUE
+    and the same dX/dY gradients as the materializing pure-jnp oracle
+    path, to ≤ 1e-5."""
+    x, y, t = _problem(key, n=48, c=120, d=16)
+    cfg_d = SCEConfig(4, 12, 24, use_mix=True, use_kernel=False)
+    cfg_k = SCEConfig(4, 12, 24, use_mix=True, use_kernel=True)
+
+    def loss(cfg):
+        return lambda x, y: sce_loss(x, y, t, key=key, cfg=cfg)
+
+    ld = loss(cfg_d)(x, y)
+    lk = loss(cfg_k)(x, y)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(ld), rtol=1e-5)
+    gd = jax.grad(loss(cfg_d), argnums=(0, 1))(x, y)
+    gk = jax.grad(loss(cfg_k), argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gk[0], gd[0], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gk[1], gd[1], rtol=1e-5, atol=1e-5)
+
+
+def test_valid_mask_starved_kernel_path_matches_dense(key):
+    """Fewer valid positions than b_x: the streaming selection's
+    placeholder tail slots must land on masked positions (like the
+    dense path's NEG_INF-tie tail) so the two paths compute the SAME
+    loss and the same zero padding-gradient."""
+    x, y, t = _problem(key, n=32)
+    vm = jnp.arange(32) < 6  # 6 valid positions, b_x = 8 > 6
+    cfg_d = SCEConfig(4, 8, 32, use_mix=True, use_kernel=False)
+    cfg_k = SCEConfig(4, 8, 32, use_mix=True, use_kernel=True)
+    ld = sce_loss(x, y, t, key=key, cfg=cfg_d, valid_mask=vm)
+    lk = sce_loss(x, y, t, key=key, cfg=cfg_k, valid_mask=vm)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(ld), rtol=1e-5)
+    g = jax.grad(
+        lambda x: sce_loss(x, y, t, key=key, cfg=cfg_k, valid_mask=vm)
+    )(x)
+    np.testing.assert_allclose(np.asarray(g)[6:], 0.0, atol=1e-7)
+
+
 def test_mix_aligns_buckets_with_data(key):
     """The Mix mechanism (paper §3.2): B = ΩX spans informative directions
     of X, so Mix bucket centers correlate with X's principal direction far
@@ -174,6 +213,67 @@ def test_mix_aligns_buckets_with_data(key):
     assert mix > 0.5  # strongly aligned with the data direction
     assert nomix < 3.0 / jnp.sqrt(d) * 2  # chance-level alignment
     assert mix > 3 * nomix
+
+
+def test_mix_centers_bf16_matches_f32_selection(key):
+    """Regression (PR 3): the Mix projection Ω X must be drawn and
+    accumulated in f32 regardless of the training dtype. Pre-fix, a
+    bf16 ``x`` drew a *different* (quantized) Ω and accumulated the
+    N-term sums in bf16 — selected candidate overlap vs the f32 run was
+    ~6% at N=4096; post-fix it is ~99.6%."""
+    n, d, c, n_b, b_y = 4096, 32, 2000, 8, 64
+    x32 = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    x32 = x32.astype(jnp.bfloat16).astype(jnp.float32)  # representable
+    y = jax.random.normal(jax.random.fold_in(key, 2), (c, d))
+
+    def selected(x):
+        b = make_bucket_centers(key, x, n_b, use_mix=True)
+        _, idx = jax.lax.top_k(b.astype(jnp.float32) @ y.T, b_y)
+        return np.asarray(idx)
+
+    a = selected(x32)
+    b = selected(x32.astype(jnp.bfloat16))
+    overlap = np.mean(
+        [len(set(r1) & set(r2)) / b_y for r1, r2 in zip(a, b)]
+    )
+    assert overlap >= 0.95, overlap
+    # and the centers themselves only differ by the final bf16 cast
+    bc = make_bucket_centers(key, x32.astype(jnp.bfloat16), n_b,
+                             use_mix=True)
+    assert bc.dtype == jnp.bfloat16  # output stays in the training dtype
+
+
+def test_honest_memory_model_fused_vs_dense():
+    """The whole-pipeline memory model (PR 3): the materializing path is
+    dominated by the (n_b, max(N, C)) selection scores once C is large
+    — STRICTLY more than the §3.1 logit-only number — while the fused
+    path stays within the streaming budget
+    n_b·block_c + n_b·(2·max(b_x, b_y)) + gather tile + loss rows."""
+    from repro.core.sce import sce_loss_memory_bytes, sce_peak_elements
+
+    n, c, d = 128 * 200, 10**6, 64
+    cfg = SCEConfig.from_alpha_beta(n, c, bucket_size_y=256)
+    dense = sce_peak_elements(cfg, n, c, d, fused=False)
+    fused = sce_peak_elements(cfg, n, c, d, fused=True)
+
+    # honest dense ≥ the logit-only §3.1 number (it was undercounting)
+    assert dense["total"] > cfg.logit_tensor_elements()
+    assert dense["selection_scores"] == cfg.n_buckets * max(n, c)
+    # fused kills the catalog-sized terms entirely
+    assert fused["selection_scores"] < dense["selection_scores"] / 100
+    assert fused["candidate_grads"] == 0
+    assert fused["total"] < dense["total"] / 100
+    # acceptance bound: ≤ n_b·block_c + n_b·(b_y + K-scratch) + O(small)
+    n_b = cfg.n_buckets
+    k = max(cfg.bucket_size_x, cfg.bucket_size_y)
+    bound = n_b * 512 + n_b * 2 * k + 256 * d + 2 * n_b * cfg.bucket_size_x
+    assert fused["total"] <= bound
+
+    # bytes API: legacy call unchanged; shape-aware call = total * bytes
+    assert sce_loss_memory_bytes(cfg) == cfg.logit_tensor_elements() * 4
+    assert sce_loss_memory_bytes(
+        cfg, n_positions=n, catalog=c, d_model=d, fused=True
+    ) == fused["total"] * 4
 
 
 def test_softcap_applied(key):

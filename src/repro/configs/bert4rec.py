@@ -36,6 +36,7 @@ ARCH = register(
         shapes=recsys_shapes(),
         optimizer="adamw",
         train_loss="sce",
+        eval_protocol="leave-one-out",
         dtype="float32",
         microbatches={"train_batch": 8},
         sce_bucket_size_y=512,

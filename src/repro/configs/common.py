@@ -43,6 +43,11 @@ class ArchSpec:
     # 4 bytes/param — 16 GB/device at 512 chips).
     accum_dtype: str = "float32"
     sce_bucket_size_y: int = 512
+    # In-loop evaluation protocol (repro.eval): "leave-one-out" (seqrec
+    # — one held-out item per user), "token-rank" (lm — every next-token
+    # position against the full vocab), or None (no streaming eval
+    # protocol defined; --eval-every warns loudly and skips).
+    eval_protocol: Optional[str] = None
     notes: str = ""
 
     def shape(self, name: str) -> ShapeSpec:

@@ -64,6 +64,7 @@ ARCH = register(
         shapes=lm_shapes(long_ctx_skip=None),  # runs 500k (local/global)
         optimizer="adamw",
         train_loss="sce",
+        eval_protocol="token-rank",
         dtype="bfloat16",
         fsdp=False,  # 2.6B replicates fine; TP for the 256k-vocab head
         microbatches={"train_4k": 2},

@@ -61,6 +61,7 @@ ARCH = register(
         ),
         optimizer="adamw",
         train_loss="sce",
+        eval_protocol="token-rank",
         dtype="bfloat16",
         fsdp=False,
         microbatches={"train_4k": 8},

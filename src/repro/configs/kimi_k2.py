@@ -68,6 +68,7 @@ ARCH = register(
         ),
         optimizer="adafactor",
         train_loss="sce",
+        eval_protocol="token-rank",
         dtype="bfloat16",
         fsdp=True,
         microbatches={"train_4k": 16},

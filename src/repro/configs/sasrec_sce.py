@@ -54,6 +54,7 @@ ARCH = register(
         ),
         optimizer="adamw",
         train_loss="sce",
+        eval_protocol="leave-one-out",
         dtype="float32",
         sce_bucket_size_y=256,
         notes="paper reproduction arch (extra, beyond the assigned 10)",

@@ -53,6 +53,7 @@ ARCH = register(
         ),
         optimizer="adamw",
         train_loss="sce",
+        eval_protocol="token-rank",
         dtype="bfloat16",
         fsdp=True,
         microbatches={"train_4k": 4},

@@ -59,15 +59,26 @@ def ce(x, y, targets, valid_mask=None, key=None) -> Tuple[jax.Array, Aux]:
 
 
 def ce_chunked(
-    x, y, targets, valid_mask=None, key=None, *, chunk_size: int = 8192
+    x, y, targets, valid_mask=None, key=None, *, chunk_size: int = 8192,
+    logit_softcap: Optional[float] = None,
 ) -> Tuple[jax.Array, Aux]:
     """CE with an online (streaming) logsumexp over catalog chunks.
 
     Numerically identical to :func:`ce` but peak loss-memory is
     ``N × chunk_size`` instead of ``N × C``. Chunks are scanned with a
     carried (running-max, running-sumexp) pair — the same recurrence the
-    fused Pallas kernel implements in VMEM.
+    fused Pallas kernel implements in VMEM. ``logit_softcap`` applies
+    gemma-2-style ``cap·tanh(logit/cap)`` to every (positive and
+    negative) logit inside the scan, so softcapped models get their
+    ACTUAL CE, still without an ``N × C`` tensor. Logits and the
+    running carry are f32 regardless of the input dtype — a bf16 carry
+    would compound ~8-bit-mantissa error over the hundreds of chunk
+    folds a real vocab takes (the same rule the fused kernel and the
+    ``kernels/ref.py`` oracles follow).
     """
+    from repro.core.sce import apply_softcap
+
+    f32 = jnp.float32
     n, d = x.shape
     c = y.shape[0]
     n_chunks = -(-c // chunk_size)
@@ -78,9 +89,11 @@ def ce_chunked(
     col_ids = jnp.arange(n_chunks * chunk_size).reshape(n_chunks, chunk_size)
 
     def step(carry, inp):
-        m, s = carry  # running max (N,), running sumexp (N,)
+        m, s = carry  # running max (N,), running sumexp (N,) — f32
         y_c, ids = inp
-        logits = x @ y_c.T  # (N, chunk)
+        logits = apply_softcap(
+            jnp.dot(x, y_c.T, preferred_element_type=f32), logit_softcap
+        )  # (N, chunk)
         logits = jnp.where((ids < c)[None, :], logits, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
         s = s * jnp.exp(m - m_new) + jnp.sum(
@@ -88,10 +101,16 @@ def ce_chunked(
         )
         return (m_new, s), None
 
-    init = (jnp.full((n,), NEG_INF, x.dtype), jnp.zeros((n,), x.dtype))
+    init = (jnp.full((n,), NEG_INF, f32), jnp.zeros((n,), f32))
     (m, s), _ = jax.lax.scan(step, init, (y_chunks, col_ids))
     lse = m + jnp.log(s)
-    pos = jnp.einsum("nd,nd->n", x, jnp.take(y, targets, axis=0))
+    pos = apply_softcap(
+        jnp.einsum(
+            "nd,nd->n", x, jnp.take(y, targets, axis=0),
+            preferred_element_type=f32,
+        ),
+        logit_softcap,
+    )
     per_pos = lse - pos
     return _mean_over_valid(per_pos, valid_mask), {"lse": jnp.mean(lse)}
 

@@ -100,9 +100,19 @@ class SequenceDataset:
         return batch, cursor.advance()
 
     def eval_batch(self, cursor: Cursor) -> Tuple[Dict[str, np.ndarray], Cursor]:
-        """Held-out batch: same generator, disjoint salt → unseen users."""
-        shifted = Cursor(seed=cursor.seed + 0x5EED, step=cursor.step)
-        return self.next_batch(shifted)
+        """Held-out batch: same generator, disjoint split → unseen users
+        (the seqrec leave-one-out eval stream)."""
+        return self.next_batch(cursor.split("eval"))
+
+    def heldout_batch(
+        self, cursor: Cursor
+    ) -> Tuple[Dict[str, np.ndarray], Cursor]:
+        """Held-out token stream for the LM token-rank protocol: same
+        generator, disjoint ``"heldout"`` split — every next-token
+        position of these sequences is an eval row
+        (``repro.eval.evaluate_streaming_lm``), unlike ``eval_batch``
+        whose leave-one-out protocol scores one position per user."""
+        return self.next_batch(cursor.split("heldout"))
 
 
 def lm_batch(cursor: Cursor, vocab: int, batch: int, seq_len: int):

@@ -11,10 +11,14 @@ Layers:
       bitwise-consistent target-score extractor); chunked pure-jnp
       reference in ``kernels/ref.py``.
   ``streaming``            — scorer front-end + incremental metric
-      accumulators + the analytic eval-memory model.
-  ``harness``              — leave-one-out driver (``score_fn``
-      protocol over SASRec / BERT4Rec), single-device or sharded
-      (catalog over ``model``, batch over the data axes).
+      accumulators + the analytic memory models.
+  ``harness``              — protocol drivers: leave-one-out
+      (``evaluate_streaming`` — ``score_fn`` over SASRec / BERT4Rec)
+      and held-out token-rank for the LM family
+      (``evaluate_streaming_lm`` — every next-token position is an
+      eval row, ``B·T`` of them, against the full vocabulary); both
+      single-device or sharded (catalog/vocab over ``model``, rows
+      over the data axes).
 
 ``core.metrics`` (dense ``(B, C)`` scoring) remains in place as the
 oracle the equality tests pin this package against.
@@ -23,23 +27,35 @@ from repro.eval.harness import (
     bert4rec_score_fn,
     default_score_fn,
     evaluate_streaming,
+    evaluate_streaming_lm,
+    lm_score_fn,
+    lm_targets_and_valid,
     sasrec_score_fn,
 )
 from repro.eval.streaming import (
     MetricAccumulator,
+    TokenRankAccumulator,
     dense_eval_elements,
+    dense_lm_eval_elements,
     eval_peak_elements,
+    lm_eval_peak_elements,
     ranks_from_counts,
     streaming_rank_topk,
 )
 
 __all__ = [
     "MetricAccumulator",
+    "TokenRankAccumulator",
     "bert4rec_score_fn",
     "default_score_fn",
     "dense_eval_elements",
+    "dense_lm_eval_elements",
     "eval_peak_elements",
     "evaluate_streaming",
+    "evaluate_streaming_lm",
+    "lm_eval_peak_elements",
+    "lm_score_fn",
+    "lm_targets_and_valid",
     "ranks_from_counts",
     "sasrec_score_fn",
     "streaming_rank_topk",

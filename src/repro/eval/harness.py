@@ -15,7 +15,10 @@ representation at the scoring position and ``catalog`` the shard-even
 ``(C_pad, d)`` item table slice (``loss_catalog`` — phantom rows are
 masked by id range, so eval shards the catalog exactly like the loss
 does). ``sasrec_score_fn`` hides the target and re-right-aligns;
-``bert4rec_score_fn`` replaces it with [MASK] (the Cloze eval protocol).
+``bert4rec_score_fn`` replaces it with [MASK] (the Cloze eval protocol);
+``lm_score_fn`` flattens EVERY next-token position into an eval row
+(``(B·T, d)`` states against the padded vocab table — the token-rank
+protocol, driven by :func:`evaluate_streaming_lm`).
 
 Sharded path: with a ``mesh``, scoring runs under ``shard_map`` — batch
 rows over the data axes, catalog rows over ``model``
@@ -40,6 +43,7 @@ from repro.dist.collectives import distributed_topk_from_local
 from repro.dist.sharding import batch_spec, catalog_spec, data_axes
 from repro.eval.streaming import (
     MetricAccumulator,
+    TokenRankAccumulator,
     ranks_from_counts,
     streaming_rank_topk,
 )
@@ -85,6 +89,33 @@ def bert4rec_score_fn(cfg) -> ScoreFn:
 def default_score_fn(cfg) -> ScoreFn:
     """SASRec for causal configs, BERT4Rec otherwise."""
     return sasrec_score_fn(cfg) if cfg.causal else bert4rec_score_fn(cfg)
+
+
+def lm_score_fn(cfg) -> ScoreFn:
+    """Next-token protocol for the transformer LM family: ONE forward
+    over the ``(B, T)`` token batch, then every position becomes an
+    eval row — hidden states flatten ``(B, T, d) → (B·T, d)`` and score
+    against the full (padded) output embedding ``(V_pad, d)``. Which
+    rows actually count (padding positions, the final position, rows
+    whose next token is the pad id) is decided by the validity mask
+    (:func:`lm_targets_and_valid`) AFTER the streamed scoring, so the
+    scorer keeps a static shape.
+
+    Note on gemma-2's final-logit softcap: ``cap·tanh(·/cap)`` is
+    strictly monotone, so ranks, top-k ids and tie order are invariant
+    under it — token-rank metrics are computed from the raw streamed
+    scores. (The reported next-token ``loss`` is NOT cap-invariant and
+    applies the cap inside its chunked scan; see
+    :func:`evaluate_streaming_lm`.)
+    """
+    from repro.models import transformer as tf_lib
+
+    def fn(params, tokens):
+        hidden, _ = tf_lib.forward(params, cfg, tokens)
+        states = hidden.reshape(-1, hidden.shape[-1])
+        return states, tf_lib.output_embedding(params, cfg)
+
+    return fn
 
 
 # ---------------------------------------------------------------------------
@@ -169,8 +200,8 @@ def evaluate_streaming(
 _SHARDED_FNS: Dict[tuple, Callable] = {}
 
 
-def _sharded_eval_fn(mesh, k, block_c, n_items):
-    cache_key = (mesh, k, block_c, n_items)
+def _sharded_eval_fn(mesh, k, block_c, c_lo, c_hi):
+    cache_key = (mesh, k, block_c, c_lo, c_hi)
     fn = _SHARDED_FNS.get(cache_key)
     if fn is not None:
         return fn
@@ -187,7 +218,7 @@ def _sharded_eval_fn(mesh, k, block_c, n_items):
         )
         vals_l, ids_l, gt_l, eq_l = ops.eval_topk(
             x_l, y_l, tgt, k,
-            block_c=block_c, c_lo=1, c_hi=n_items, id_offset=offset,
+            block_c=block_c, c_lo=c_lo, c_hi=c_hi, id_offset=offset,
         )
         gt = jax.lax.psum(gt_l, "model")
         eq = jax.lax.psum(eq_l, "model")
@@ -213,21 +244,23 @@ def _sharded_eval_fn(mesh, k, block_c, n_items):
     return fn
 
 
-def _evaluate_sharded(
-    params, cfg, tokens, targets, k, *, score_fn, mesh, block_c
+def _rank_topk_sharded(
+    states, catalog, targets, k, *, mesh, block_c, c_lo, c_hi
 ):
-    """shard_map scoring: per-model-shard streaming over the local
-    catalog slice, psum'd rank counts, two-stage top-k merge."""
+    """shard_map rank-and-topk over precomputed eval rows: per-model-
+    shard streaming over the local catalog slice, psum'd rank counts,
+    two-stage top-k merge. Rows are padded to the data-axis product by
+    repeating the last row (dropped after scoring)."""
     dp = math.prod(mesh.shape[ax] for ax in data_axes(mesh)) or 1
-    b = tokens.shape[0]
+    b = states.shape[0]
     pad = (-b) % dp
     if pad:
-        # padded rows: repeat the last sequence; dropped after scoring
-        tokens = np.concatenate([tokens, tokens[-1:].repeat(pad, 0)])
-        targets = np.concatenate([targets, targets[-1:].repeat(pad, 0)])
+        states = jnp.concatenate([states, jnp.repeat(states[-1:], pad, 0)])
+        targets = np.concatenate(
+            [np.asarray(targets), np.asarray(targets)[-1:].repeat(pad, 0)]
+        )
 
-    states, catalog = score_fn(params, jnp.asarray(tokens))
-    fn = _sharded_eval_fn(mesh, k, block_c, cfg.n_items)
+    fn = _sharded_eval_fn(mesh, k, block_c, c_lo, c_hi)
     with set_mesh(mesh):
         vals, ids, gt, eq = fn(
             states, catalog, jnp.asarray(targets, jnp.int32)
@@ -235,3 +268,138 @@ def _evaluate_sharded(
     if pad:
         return vals[:b], ids[:b], gt[:b], eq[:b]
     return vals, ids, gt, eq
+
+
+def _evaluate_sharded(
+    params, cfg, tokens, targets, k, *, score_fn, mesh, block_c
+):
+    """Leave-one-out sharded scoring: one eval row per kept sequence."""
+    states, catalog = score_fn(params, jnp.asarray(tokens))
+    return _rank_topk_sharded(
+        states, catalog, targets, k,
+        mesh=mesh, block_c=block_c, c_lo=1, c_hi=cfg.n_items,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Held-out token-rank protocol (LM family)
+# ---------------------------------------------------------------------------
+def lm_targets_and_valid(
+    tokens: np.ndarray, pad_id: int = 0
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Next-token targets + validity mask for a ``(B, T)`` token batch.
+
+    ``targets[i, t] = tokens[i, t+1]``; a position is valid iff it is a
+    real (non-pad) token AND its next token is real — the final column
+    and padding never count. Same convention as
+    ``data.sequences.SequenceDataset.next_batch``.
+    """
+    tokens = np.asarray(tokens)
+    targets = np.zeros_like(tokens)
+    targets[:, :-1] = tokens[:, 1:]
+    valid = tokens != pad_id
+    valid[:, -1] = False
+    valid &= targets != pad_id
+    return targets, valid
+
+
+def evaluate_streaming_lm(
+    params,
+    cfg,
+    eval_batch,
+    *,
+    ks: Sequence[int] = (1, 5, 10),
+    mesh=None,
+    block_b: int = 128,
+    block_c: int = 512,
+    impl: str = "auto",
+    interpret: bool | None = None,
+    accumulator: Optional[TokenRankAccumulator] = None,
+) -> Dict[str, float]:
+    """Held-out token-rank evaluation of a transformer LM — every
+    next-token position is scored against the full vocabulary without
+    ever materializing the ``(B·T, V)`` logit matrix.
+
+    The LM twin of :func:`evaluate_streaming`: one
+    ``transformer.forward`` pass produces ``(B·T, d)`` eval rows
+    (:func:`lm_score_fn`); the streamed catalog pass yields each
+    position's target-token rank (pessimistic ties, ``c_lo=1`` /
+    ``c_hi=cfg.vocab`` masking the pad id and the phantom padded vocab
+    rows — a rank-only ``k=1`` pass, since no token-rank metric needs
+    recommended ids); padding / final positions are dropped by the
+    validity mask before folding into the
+    :class:`TokenRankAccumulator`. The next-token ``loss`` is the
+    chunked online-LSE CE over the real vocabulary excluding the pad id
+    (``y[1:V]``, targets shifted by 1) — peak ``B·T·block_c`` elements,
+    never ``B·T·V``. gemma-2-style final-logit softcaps are monotone
+    and therefore rank-invariant (ranks use raw logits), but CE is not:
+    the cap is applied inside the chunked loss scan, so the reported
+    loss is the model's actual next-token NLL.
+
+    Parameters
+    ----------
+    params, cfg : transformer params + ``TransformerConfig``.
+    eval_batch : dict with ``"tokens"`` (B, T); the pipeline's
+        ``"targets"`` / ``"valid"`` are consumed when present (they
+        honor the dataset's pad id), else recomputed via
+        :func:`lm_targets_and_valid`.
+    ks : metric cutoffs.
+    mesh : optional — shard the vocab table over ``model``
+        (``catalog_spec``, the same vocab-parallel layout the SCE loss
+        uses) and the ``B·T`` rows over the data axes; per-shard
+        candidates merge through ``distributed_topk_from_local``.
+    impl, interpret, block_b, block_c : scorer knobs
+        (see ``streaming_rank_topk``; sharded path: ``block_c`` only).
+    accumulator : fold into an existing :class:`TokenRankAccumulator`
+        (multi-batch held-out streams); a fresh one otherwise.
+
+    Returns
+    -------
+    dict — ``hr@k`` / ``ndcg@k`` / ``mean_rank`` / ``loss`` /
+    ``n_tokens`` (see ``TokenRankAccumulator.result``).
+    """
+    from repro.core.losses import ce_chunked
+
+    tokens = np.asarray(eval_batch["tokens"])
+    if "targets" in eval_batch and "valid" in eval_batch:
+        # the data pipeline already computed the next-token shift with
+        # ITS pad id (SequenceDataset.next_batch) — consume it
+        targets = np.asarray(eval_batch["targets"])
+        valid = np.asarray(eval_batch["valid"])
+    else:
+        targets, valid = lm_targets_and_valid(tokens)
+    t_flat = jnp.asarray(targets.reshape(-1), jnp.int32)
+    v_flat = valid.reshape(-1)
+
+    # Every token-rank metric is a function of the rank counts alone
+    # (TokenRankAccumulator folds no ids — there is no COV here), so
+    # the streamed pass runs with k=1: the top-k merge recurrence costs
+    # K unrolled rounds per tile, all discarded beyond the counts.
+    states, catalog = lm_score_fn(cfg)(params, jnp.asarray(tokens))
+    if mesh is None:
+        _, _, gt, eq = streaming_rank_topk(
+            states, catalog, t_flat, 1,
+            block_b=block_b, block_c=block_c,
+            c_lo=1, c_hi=cfg.vocab,
+            impl=impl, interpret=interpret,
+        )
+    else:
+        _, _, gt, eq = _rank_topk_sharded(
+            states, catalog, t_flat, 1,
+            mesh=mesh, block_c=block_c, c_lo=1, c_hi=cfg.vocab,
+        )
+    ranks = ranks_from_counts(gt, eq)[v_flat]
+
+    # Next-token NLL over the real vocab minus the pad id: slice the
+    # table (a view, not a copy) and shift targets — invalid rows are
+    # masked out of the mean, so their (clipped) gather is harmless.
+    # Softcapped archs (gemma-2) get the cap applied inside the chunked
+    # scan: ranks are softcap-invariant but the CE is not.
+    nll_mean, _ = ce_chunked(
+        states, catalog[1:cfg.vocab], t_flat - 1,
+        valid_mask=jnp.asarray(v_flat), chunk_size=block_c,
+        logit_softcap=getattr(cfg, "final_softcap", None),
+    )
+    acc = accumulator or TokenRankAccumulator(ks, cfg.vocab)
+    acc.update(ranks, nll_sum=float(nll_mean) * int(v_flat.sum()))
+    return acc.result()

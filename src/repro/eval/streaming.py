@@ -24,7 +24,7 @@ rule):
 from __future__ import annotations
 
 import functools
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -121,6 +121,19 @@ def ranks_from_counts(gt, eq):
 # ---------------------------------------------------------------------------
 # Incremental metric accumulators
 # ---------------------------------------------------------------------------
+def _fold_hit_ndcg(ranks, ks, hit_sums, ndcg_sums) -> None:
+    """Fold a batch of 0-based ranks into running per-``k`` HR / NDCG
+    sums — the one place the hit rule (``rank < k``) and the NDCG
+    discount (``1/log2(rank + 2)``) are written, shared by both the
+    leave-one-out and token-rank accumulators."""
+    for k in ks:
+        hit = ranks < k
+        hit_sums[k] += float(hit.sum())
+        ndcg_sums[k] += float(
+            np.where(hit, 1.0 / np.log2(ranks + 2.0), 0.0).sum()
+        )
+
+
 class MetricAccumulator:
     """Fold per-batch ``(ranks, topk_ids)`` into running HR/NDCG/COV sums.
 
@@ -157,12 +170,8 @@ class MetricAccumulator:
         ranks = np.asarray(ranks)
         topk_ids = np.asarray(topk_ids)
         self.n_users += len(ranks)
+        _fold_hit_ndcg(ranks, self.ks, self._hit, self._ndcg)
         for k in self.ks:
-            hit = ranks < k
-            self._hit[k] += float(hit.sum())
-            self._ndcg[k] += float(
-                np.where(hit, 1.0 / np.log2(ranks + 2.0), 0.0).sum()
-            )
             ids = topk_ids[:, :k].ravel()
             ids = ids[(ids >= 0) & (ids < self.catalog)]
             self._seen[k][ids] = True
@@ -175,6 +184,69 @@ class MetricAccumulator:
             out[f"hr@{k}"] = self._hit[k] / n
             out[f"ndcg@{k}"] = self._ndcg[k] / n
             out[f"cov@{k}"] = float(self._seen[k].sum()) / self.catalog
+        return out
+
+
+class TokenRankAccumulator:
+    """Fold per-position token ranks into running LM eval metrics.
+
+    The per-position (token-rank) variant of :class:`MetricAccumulator`:
+    the LM held-out protocol scores **every next-token position** — the
+    eval row count is ``B·T``, not ``B`` — and the quantities folded are
+    the target token's full-vocabulary rank per valid position plus the
+    (streamed) next-token NLL. Metrics follow Xu et al. (2402.06216):
+    full-vocab HR@K / NDCG@K, mean rank, and next-token loss.
+
+    Parameters
+    ----------
+    ks : cutoffs, e.g. ``(1, 5, 10)``.
+    vocab : real vocabulary size ``V`` (``cfg.vocab``) — recorded for
+        reporting; ranks are already global.
+    """
+
+    def __init__(self, ks: Sequence[int], vocab: int):
+        self.ks = tuple(ks)
+        self.vocab = int(vocab)
+        self.n_tokens = 0
+        self._hit = {k: 0.0 for k in self.ks}
+        self._ndcg = {k: 0.0 for k in self.ks}
+        self._rank_sum = 0.0
+        self._nll_sum = 0.0
+        self._has_nll = False
+
+    def update(self, ranks, *, nll_sum: Optional[float] = None) -> None:
+        """Fold one batch of valid positions.
+
+        Parameters
+        ----------
+        ranks : (n_valid,) 0-based target-token ranks
+            (``ranks_from_counts`` over the valid positions only —
+            padding and final positions are dropped BEFORE folding).
+        nll_sum : optional summed next-token NLL over the same
+            positions (from the chunked online-LSE CE — never a
+            ``(B·T, V)`` tensor).
+        """
+        ranks = np.asarray(ranks)
+        self.n_tokens += len(ranks)
+        _fold_hit_ndcg(ranks, self.ks, self._hit, self._ndcg)
+        self._rank_sum += float(ranks.sum())
+        if nll_sum is not None:
+            self._nll_sum += float(nll_sum)
+            self._has_nll = True
+
+    def result(self) -> Dict[str, float]:
+        """Metric dict: ``hr@k`` / ``ndcg@k`` / ``mean_rank`` (1-based:
+        1.0 means every target token ranked first) / ``loss`` (mean
+        next-token NLL, when folded) / ``n_tokens``."""
+        n = max(self.n_tokens, 1)
+        out: Dict[str, float] = {}
+        for k in self.ks:
+            out[f"hr@{k}"] = self._hit[k] / n
+            out[f"ndcg@{k}"] = self._ndcg[k] / n
+        out["mean_rank"] = self._rank_sum / n + 1.0
+        if self._has_nll:
+            out["loss"] = self._nll_sum / n
+        out["n_tokens"] = float(self.n_tokens)
         return out
 
 
@@ -199,3 +271,31 @@ def dense_eval_elements(batch: int, catalog: int) -> int:
     """Score-side elements of the materializing path: the full
     ``(B, C)`` matrix (plus its host argsort copy, not counted)."""
     return batch * catalog
+
+
+def lm_eval_peak_elements(
+    batch: int, seq_len: int, k: int, block_c: int = 512
+) -> int:
+    """Peak live score-side elements of the streaming token-rank path.
+
+    The LM held-out protocol evaluates **every** next-token position,
+    so the eval row count is ``rows = B·T`` — this is where streaming
+    matters most: the dense path would hold ``B·T·V`` score elements
+    (:func:`dense_lm_eval_elements`), already ~2 GB f32 at the gemma-2
+    smoke of ``B=32, T=64, V=256k``. The streaming path carries the
+    shared top-k term (``topk_merge.streaming_topk_elements`` — one
+    ``(rows, block_c)`` tile + the ``(rows, k)`` merge buffers) plus
+    four ``(rows,)`` vectors: the ``gt``/``eq`` rank counts, the target
+    scores, and the online-LSE carry of the chunked next-token NLL
+    (whose own ``(rows, block_c)`` tile is not live at the same time as
+    the rank pass). ``O(B·T·(K + block))``, independent of ``V``."""
+    from repro.kernels.topk_merge import streaming_topk_elements
+
+    rows = batch * seq_len
+    return streaming_topk_elements(rows, k, block_c) + 4 * rows
+
+
+def dense_lm_eval_elements(batch: int, seq_len: int, vocab: int) -> int:
+    """Score-side elements of a materializing token-rank eval: the full
+    ``(B·T, V)`` logit matrix."""
+    return batch * seq_len * vocab

@@ -16,10 +16,13 @@ arrays. Production behavior:
     written on one mesh restores onto any other (see CheckpointManager).
   * optional **int8 error-feedback gradient compression** models the
     cross-pod DCI payload (--grad-compression int8).
-  * **periodic in-loop evaluation** (``--eval-every``, seqrec only):
-    unsampled HR/NDCG/COV on a held-out user stream through
-    ``repro.eval`` — streaming rank-and-topk, never a ``(B, C)`` score
-    matrix; sharded over the mesh when the model axis is >1.
+  * **periodic in-loop evaluation** (``--eval-every``) through
+    ``repro.eval``, dispatched on ``ArchSpec.eval_protocol``:
+    leave-one-out unsampled HR/NDCG/COV on a held-out user stream
+    (seqrec) or held-out token-rank HR/NDCG/mean-rank + next-token loss
+    over EVERY position (lm) — streaming rank-and-topk, never a
+    ``(rows, C)`` score matrix; sharded over the mesh when the model
+    axis is >1. Archs without a protocol warn loudly and skip.
 
 On this CPU container, ``--smoke`` selects each arch's reduced config so
 the loop actually trains; the full configs are exercised via dryrun.py.
@@ -195,21 +198,40 @@ def train(
             start_step = int(state["step"]) + 1
             print(f"[restore] resumed from step {last}")
 
-    # Periodic unsampled eval (seqrec only — the other families have no
-    # leave-one-out catalog protocol): streaming rank-and-topk over a
-    # held-out user stream, sharded over the mesh when model-parallel.
-    do_eval = eval_every > 0 and arch.family == "seqrec"
+    # Periodic unsampled eval, dispatched on the arch's declared
+    # protocol (configs.common.ArchSpec.eval_protocol): streaming
+    # rank-and-topk over a held-out stream, sharded over the mesh when
+    # model-parallel. "leave-one-out" scores one held-out item per user
+    # (seqrec); "token-rank" scores EVERY next-token position against
+    # the full vocabulary (lm) — no (rows, C) score matrix either way.
+    protocol = arch.eval_protocol
+    do_eval = eval_every > 0 and protocol is not None
+    if eval_every > 0 and protocol is None:
+        print(
+            f"[eval] WARNING: --eval-every {eval_every} requested, but "
+            f"arch {arch.name!r} (family {arch.family!r}) defines no "
+            f"eval protocol — in-loop evaluation is SKIPPED. Set "
+            f"ArchSpec.eval_protocol ('leave-one-out' or 'token-rank') "
+            f"to enable it."
+        )
     eval_metrics: Dict[str, float] = {}
     if do_eval:
         from repro.data import SeqDataConfig as _SDC
         from repro.data import SequenceDataset as _SD
-        from repro.eval import evaluate_streaming
+        from repro.eval import evaluate_streaming, evaluate_streaming_lm
 
-        eval_data = _SD(_SDC(
-            n_items=cfg.n_items, seq_len=cfg.max_len,
-            batch_size=eval_users,
-        ))
-        eval_batch, _ = eval_data.eval_batch(Cursor(seed=seed))
+        if protocol == "token-rank":
+            eval_data = _SD(_SDC(
+                n_items=cfg.vocab, seq_len=seq_len,
+                batch_size=eval_users, min_len_frac=1.0,
+            ))
+            eval_batch, _ = eval_data.heldout_batch(Cursor(seed=seed))
+        else:  # leave-one-out
+            eval_data = _SD(_SDC(
+                n_items=cfg.n_items, seq_len=cfg.max_len,
+                batch_size=eval_users,
+            ))
+            eval_batch, _ = eval_data.eval_batch(Cursor(seed=seed))
         eval_mesh = mesh if mesh.shape.get("model", 1) > 1 else None
 
     losses, times = [], []
@@ -251,9 +273,14 @@ def train(
             if step % log_every == 0:
                 print(f"step {step:5d}  loss {loss:.4f}  {dt*1e3:.0f} ms")
             if do_eval and (step + 1) % eval_every == 0:
-                eval_metrics = evaluate_streaming(
-                    params, cfg, eval_batch, mesh=eval_mesh
-                )
+                if protocol == "token-rank":
+                    eval_metrics = evaluate_streaming_lm(
+                        params, cfg, eval_batch, mesh=eval_mesh
+                    )
+                else:
+                    eval_metrics = evaluate_streaming(
+                        params, cfg, eval_batch, mesh=eval_mesh
+                    )
                 shown = {k: round(v, 4) for k, v in eval_metrics.items()}
                 print(f"[eval] step {step}: {shown}")
             if mgr is not None and (step + 1) % ckpt_every == 0:
@@ -296,8 +323,11 @@ def main() -> None:
     ap.add_argument("--skip-stragglers", action="store_true")
     ap.add_argument("--eval-every", type=int, default=0,
                     help="run streaming unsampled eval every N steps "
-                         "(seqrec archs only; 0 = off)")
-    ap.add_argument("--eval-users", type=int, default=128)
+                         "(seqrec: leave-one-out; lm: token-rank over "
+                         "every position; 0 = off)")
+    ap.add_argument("--eval-users", type=int, default=128,
+                    help="held-out sequences per eval (lm: eval rows = "
+                         "sequences x seq_len)")
     ap.add_argument("--smoke", action="store_true",
                     help="(default behaviour; flag kept for symmetry)")
     args = ap.parse_args()

@@ -1,0 +1,100 @@
+"""Schema smoke tests for the CI benchmark artifacts (ISSUE 4
+satellite): run the two ``--json`` bench CLIs at smoke scale and assert
+the required keys/types of ``BENCH_metric_memory.json`` /
+``BENCH_sce_pipeline.json`` — so benchmark refactors can't silently
+break the perf-trajectory tracking the CI artifacts accumulate."""
+import json
+import numbers
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run_bench(tmp_path, module, *args):
+    out = tmp_path / "bench.json"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    res = subprocess.run(
+        [sys.executable, "-m", module, *args, "--json", str(out)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=600,
+    )
+    assert res.returncode == 0, (
+        f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    )
+    with open(out) as f:
+        return json.load(f)
+
+
+def _assert_row(row, spec, ctx):
+    """spec: {key: type-or-tuple}; None values allowed only where the
+    spec lists NoneType in the tuple."""
+    for name, types in spec.items():
+        assert name in row, f"{ctx}: missing key {name!r} in {row}"
+        assert isinstance(row[name], types), (
+            f"{ctx}: {name!r} has type {type(row[name]).__name__}, "
+            f"wanted {types}: {row[name]!r}"
+        )
+
+
+def test_metric_memory_json_schema(tmp_path):
+    """BENCH_metric_memory.json: the loss-comparison rows CI uploads —
+    every paper-loss row present, metric/memory/time columns typed."""
+    doc = _run_bench(
+        tmp_path, "benchmarks.metric_memory", "--steps", "1"
+    )
+    assert set(doc) == {"steps", "rows", "derived"}
+    assert doc["steps"] == 1
+    assert isinstance(doc["derived"], str) and "sce_vs_ce" in doc["derived"]
+    rows = doc["rows"]
+    assert {r["loss"] for r in rows} >= {
+        "ce", "bce_plus", "gbce", "ce_minus", "ce_inbatch", "ce_pop",
+        "rece", "sce",
+    }
+    spec = {
+        "loss": str,
+        "ndcg@10": numbers.Real,
+        "hr@10": numbers.Real,
+        "cov@10": numbers.Real,
+        "mem_elems": numbers.Integral,
+        "eval_mem_elems": numbers.Integral,
+        "eval_dense_elems": numbers.Integral,
+        "time_s": numbers.Real,
+    }
+    for row in rows:
+        _assert_row(row, spec, f"metric_memory[{row.get('loss')}]")
+        assert 0 < row["eval_mem_elems"] < row["eval_dense_elems"]
+
+
+def test_sce_pipeline_json_schema(tmp_path):
+    """BENCH_sce_pipeline.json: the staged dense-vs-fused rows — all
+    four stages present; the gather stage's timings are the documented
+    nulls (analytic elements only), every other stage fully timed."""
+    doc = _run_bench(
+        tmp_path, "benchmarks.kernel_bench",
+        "--mode", "sce-pipeline", "--catalog", "512", "--positions", "128",
+    )
+    assert set(doc) == {"mode", "rows", "derived"}
+    assert doc["mode"] == "sce-pipeline"
+    assert isinstance(doc["derived"], str)
+    rows = {r["stage"]: r for r in doc["rows"]}
+    assert set(rows) == {"selection", "gather", "loss", "total"}
+    spec = {
+        "shape": str,
+        "stage": str,
+        "dense_peak_elems": numbers.Integral,
+        "fused_peak_elems": numbers.Integral,
+    }
+    for stage, row in rows.items():
+        _assert_row(row, spec, f"sce_pipeline[{stage}]")
+        timed = (numbers.Real,) if stage != "gather" else (type(None),)
+        assert isinstance(row["dense_us"], timed), stage
+        assert isinstance(row["fused_interp_us"], timed), stage
+    assert (
+        rows["total"]["fused_peak_elems"]
+        < rows["total"]["dense_peak_elems"]
+    )

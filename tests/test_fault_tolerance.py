@@ -6,6 +6,9 @@ import pytest
 
 from repro.launch.train import train
 
+# Every test here runs real multi-step training loops — the slow tier.
+pytestmark = pytest.mark.slow
+
 
 def test_train_resume_equivalence(tmp_path):
     """train(8 steps) == train(4 steps, crash, relaunch to 8) — the

@@ -33,6 +33,24 @@ def test_ce_chunked_matches_ce(key):
     np.testing.assert_allclose(a, b, rtol=1e-5)
 
 
+def test_ce_chunked_softcap_matches_dense_capped_ce(key):
+    """ce_chunked(logit_softcap=...) must equal a dense CE over
+    cap·tanh(logits/cap) — at logit scales where the cap actually
+    bites (the gemma-2 LM-eval loss path; a monotone cap preserves
+    ranks but NOT the CE value)."""
+    x, y, t = _problem(key, n=24, c=150)
+    x, y = x * 4.0, y * 4.0  # |logits| up to ~50 ≫ cap
+    cap = 10.0
+    logits = cap * jnp.tanh((x @ y.T) / cap)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    pos = jnp.take_along_axis(logits, t[:, None], axis=-1)[:, 0]
+    want = jnp.mean(lse - pos)
+    got, _ = ce_chunked(x, y, t, chunk_size=64, logit_softcap=cap)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+    uncapped, _ = ce_chunked(x, y, t, chunk_size=64)
+    assert abs(float(uncapped) - float(want)) > 0.1  # the cap matters
+
+
 def test_ce_fused_matches_ce(key):
     x, y, t = _problem(key)
     a, _ = ce(x, y, t)

@@ -1,7 +1,13 @@
 """Streaming MIPS selection (kernels/mips_topk.py + the fused
 select_buckets path): bit-exact parity with dense ``lax.top_k`` on
-values, ids and tie order, tail/clamp edge cases, fallback routing, and
-old-vs-new ``select_buckets`` equality."""
+values, ids and tie order, tail/clamp edge cases, fallback routing,
+old-vs-new ``select_buckets`` equality, and randomized property-based
+differential sweeps over ``(K, block_c, C % block_c, tie density,
+valid-mask starvation)`` for both the shared ``topk_merge`` recurrence
+and the full kernel — including the selection-sized ``K = b_y`` regime
+(ISSUE 4)."""
+import hypothesis
+import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,6 +15,7 @@ import pytest
 
 from repro.core.sce import SCEConfig, make_bucket_centers, select_buckets
 from repro.kernels import ops, ref
+from repro.kernels.topk_merge import ID_PAD, merge_topk_tile
 
 NEG_INF = -1e30
 
@@ -121,6 +128,166 @@ def test_select_buckets_fused_equals_dense(key):
         ix_k, iy_k = select_buckets(b, x, y, cfg_k, valid_mask=vm)
         np.testing.assert_array_equal(np.asarray(ix_d), np.asarray(ix_k))
         np.testing.assert_array_equal(np.asarray(iy_d), np.asarray(iy_k))
+
+
+# ---------------------------------------------------------------------------
+# Property-based differential sweeps (ISSUE 4 satellite): randomized
+# (K, block_c, C % block_c, tie density, valid starvation) vs dense
+# lax.top_k — ids, values AND tie order (id equality under exact-float
+# ties IS the tie-order assertion).
+# ---------------------------------------------------------------------------
+def _property_problem(seed, c, d, tie_level, starve):
+    """(q, y, valid) with controllable tie density / mask starvation.
+
+    tie_level 0: continuous normals (ties only by coincidence);
+    1: small-integer embeddings (exact-float scores, ties everywhere);
+    2: integer embeddings + duplicated catalog rows (every score tied).
+    starve > 0: valid mask keeps only ``starve`` columns (exercises the
+    exhausted-row ID_PAD path when starve < k).
+    """
+    kq, ky, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    n_q = 5
+    if tie_level == 0:
+        q = jax.random.normal(kq, (n_q, d))
+        y = jax.random.normal(ky, (c, d))
+    else:
+        q = jax.random.randint(kq, (n_q, d), -3, 4).astype(jnp.float32)
+        y = jax.random.randint(ky, (c, d), -2, 3).astype(jnp.float32)
+        if tie_level == 2 and c >= 2:
+            y = y.at[c // 2:].set(y[: c - c // 2])
+    if starve:
+        order = jax.random.permutation(kv, c)
+        valid = jnp.zeros((c,), bool).at[order[:starve]].set(True)
+    else:
+        valid = None
+    return q, y, valid
+
+
+def _dense_masked_topk(q, y, valid, k):
+    scores = q @ y.T
+    if valid is not None:
+        scores = jnp.where(valid[None, :], scores, NEG_INF)
+    return jax.lax.top_k(scores, min(k, y.shape[0]))
+
+
+def _assert_topk_matches(got_v, got_i, want_v, want_i, valid, k):
+    """Exact equality on values and ids; exhausted slots (fewer valid
+    columns than k) must carry the ID_PAD placeholder where the dense
+    path keeps arbitrary NEG_INF-tied ids."""
+    want_v = np.asarray(want_v)
+    want_i = np.asarray(want_i)
+    got_v = np.asarray(got_v)
+    got_i = np.asarray(got_i)
+    np.testing.assert_array_equal(got_v, want_v)
+    live = want_v > NEG_INF
+    np.testing.assert_array_equal(
+        np.where(live, got_i, 0), np.where(live, want_i, 0)
+    )
+    assert (got_i[~live] == ID_PAD).all()
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.integers(1, 300),
+    c=st.integers(3, 300),
+    block_c=st.integers(8, 64),
+    tie_level=st.integers(0, 2),
+    starve_pct=st.integers(0, 100),
+)
+@hypothesis.settings(max_examples=12, deadline=None)
+def test_mips_topk_ref_property_differential(
+    seed, k, c, block_c, tie_level, starve_pct
+):
+    """Chunked reference vs dense masked lax.top_k across randomized
+    K (selection-sized K ≥ C included) / tile size / C-mod-tile tails /
+    tie density / mask starvation (starve < k ⇒ placeholder tails)."""
+    d = 8
+    starve = 0 if starve_pct < 50 else max(1, (starve_pct - 50) * c // 100)
+    q, y, valid = _property_problem(seed, c, d, tie_level, starve)
+    want_v, want_i = _dense_masked_topk(q, y, valid, k)
+    ref_v, ref_i = ref.mips_topk_ref(q, y, k, valid=valid, chunk=block_c)
+    _assert_topk_matches(ref_v, ref_i, want_v, want_i, valid, k)
+
+
+@pytest.mark.slow
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.integers(1, 48),
+    c=st.integers(3, 300),
+    block_c=st.integers(4, 64),
+    tie_level=st.integers(0, 2),
+    starve_pct=st.integers(0, 100),
+)
+@hypothesis.settings(max_examples=5, deadline=None)
+def test_mips_topk_kernel_property_differential(
+    seed, k, c, block_c, tie_level, starve_pct
+):
+    """The Pallas kernel (interpret mode) over the same randomized
+    grid. Slow tier: each interpret call unrolls the K merge rounds,
+    ~seconds per example — the fast tier covers the identical property
+    through the reference, whose merge shares the tie rule."""
+    d = 8
+    starve = 0 if starve_pct < 50 else max(1, (starve_pct - 50) * c // 100)
+    q, y, valid = _property_problem(seed, c, d, tie_level, starve)
+    want_v, want_i = _dense_masked_topk(q, y, valid, k)
+    got_v, got_i = ops.mips_topk(
+        q, y, k, valid=valid, block_c=block_c, interpret=True
+    )
+    _assert_topk_matches(got_v, got_i, want_v, want_i, valid, k)
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.integers(1, 32),
+    n_tiles=st.integers(1, 6),
+    tile=st.integers(1, 40),
+    tie_level=st.integers(0, 1),
+)
+@hypothesis.settings(max_examples=8, deadline=None)
+def test_merge_topk_tile_property(seed, k, n_tiles, tile, tie_level):
+    """The shared merge recurrence in isolation: folding tiles one at a
+    time equals one dense lax.top_k over the whole concatenation —
+    values, ids, tie order, placeholder slots."""
+    rng = np.random.default_rng(seed)
+    rows, width = 4, n_tiles * tile
+    if tie_level:
+        scores = rng.integers(-3, 4, size=(rows, width)).astype(np.float32)
+    else:
+        scores = rng.normal(size=(rows, width)).astype(np.float32)
+    # random NEG_INF holes so some rows can exhaust below k
+    scores[rng.random((rows, width)) < 0.2] = NEG_INF
+
+    vals = jnp.full((rows, k), NEG_INF, jnp.float32)
+    ids = jnp.full((rows, k), ID_PAD, jnp.int32)
+    for t in range(n_tiles):
+        tile_scores = jnp.asarray(scores[:, t * tile:(t + 1) * tile])
+        tile_ids = jnp.broadcast_to(
+            t * tile + jnp.arange(tile, dtype=jnp.int32)[None, :],
+            tile_scores.shape,
+        )
+        vals, ids = merge_topk_tile(vals, ids, tile_scores, tile_ids, k)
+
+    want_v, want_i = jax.lax.top_k(jnp.asarray(scores), min(k, width))
+    pad = k - min(k, width)
+    if pad:  # buffer wider than the data: dense oracle covers the head
+        vals, ids = vals[:, :width], ids[:, :width]
+    _assert_topk_matches(vals, ids, want_v, want_i, None, k)
+
+
+@pytest.mark.slow
+def test_mips_topk_kernel_selection_sized_k():
+    """The selection-sized K = b_y = 256 regime (ROADMAP flags the
+    K-round merge as unprofiled there): the kernel recurrence must stay
+    exact — ids, values, tie order — at production bucket size, with a
+    C % block tail and tie-heavy integer scores. (The reference covers
+    the same regime across random draws in the fast property sweep.)"""
+    k, c, d, block_c = 256, 600, 8, 128
+    q, y, _ = _property_problem(7, c, d, tie_level=1, starve=0)
+    want_v, want_i = _dense_masked_topk(q, y, None, k)
+    got_v, got_i = ops.mips_topk(q, y, k, block_c=block_c, interpret=True)
+    _assert_topk_matches(got_v, got_i, want_v, want_i, None, k)
+    ref_v, ref_i = ref.mips_topk_ref(q, y, k, chunk=block_c)
+    _assert_topk_matches(ref_v, ref_i, want_v, want_i, None, k)
 
 
 def test_mips_topk_exhausted_rows_use_placeholder(key):

@@ -74,6 +74,7 @@ def test_40_cell_grid_accounting():
     assert cells == 40 and skips == 4
 
 
+@pytest.mark.slow  # real train steps per arch, ~1-3 min each on CPU
 @pytest.mark.parametrize("arch_name", ALL_ARCHS)
 def test_arch_smoke_train_step(arch_name):
     """One real train step on the reduced config: shapes + no NaNs."""

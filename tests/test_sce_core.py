@@ -51,6 +51,42 @@ def test_exactness_with_kernel_path(key):
     np.testing.assert_allclose(got, want, rtol=1e-5)
 
 
+@pytest.mark.slow
+def test_exactness_limit_kernel_loss_and_grads_vs_full_ce(key):
+    """ISSUE 4 satellite — the paper's "SCE approximates CE" claim
+    pinned where the approximation must VANISH: with every bucket
+    holding the whole catalog (``n_buckets · b_y ≥ C`` via
+    ``b_y = C``) and every position selected (``b_x = N``), the fused
+    kernel path's loss AND both grads must match full CE — the naive
+    materializing ``ce`` and the streaming ``fused_ce`` kernel — to
+    tolerance. Multi-bucket: the per-position max over buckets collapses
+    because every bucket computes the identical full denominator."""
+    from repro.core.losses import ce_fused
+
+    n, c = 48, 96
+    x, y, t = _problem(key, n=n, c=c, d=12)
+    for n_b in (1, 4):
+        cfg = SCEConfig(n_b, n, c, use_mix=False, use_kernel=True)
+        assert cfg.n_buckets * cfg.bucket_size_y >= c
+
+        def sce(x, y):
+            return sce_loss(x, y, t, key=key, cfg=cfg)
+
+        got = sce(x, y)
+        gx, gy = jax.grad(sce, argnums=(0, 1))(x, y)
+        for fn in (
+            lambda x, y: ce(x, y, t)[0],
+            lambda x, y: ce_fused(x, y, t)[0],
+        ):
+            want = fn(x, y)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=1e-5
+            )
+            wx, wy = jax.grad(fn, argnums=(0, 1))(x, y)
+            np.testing.assert_allclose(gx, wx, rtol=1e-4, atol=1e-6)
+            np.testing.assert_allclose(gy, wy, rtol=1e-4, atol=1e-6)
+
+
 @hypothesis.given(
     seed=st.integers(0, 2**31 - 1),
     n_b=st.integers(1, 8),

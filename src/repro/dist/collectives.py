@@ -17,7 +17,10 @@ performs (DESIGN.md §2/§4):
     single-device ``lax.top_k`` (lower global id wins). Its merge stage
     is exposed as :func:`distributed_topk_from_local` for callers whose
     local candidates come from a streaming scorer rather than a dense
-    local score matrix (``repro.eval``).
+    local score matrix (``repro.eval``); the LSE sibling
+    :func:`distributed_lse_from_local` merges per-shard online-
+    logsumexp ``(m, s)`` carries the same way (shifted-sum psum/pmax —
+    the fused eval kernel's NLL ridealong).
 
 Both degrade to a single-device fallback when called outside
 ``shard_map`` (no axis bound) so the same step code runs on one device.
@@ -193,6 +196,50 @@ def distributed_topk_from_local(
     vals, sel = jax.lax.top_k(vals_u, kk)
     gids = jnp.take_along_axis(gids_u, sel, axis=-1)
     return vals, gids
+
+
+def distributed_lse_from_local(
+    m_l: jax.Array, s_l: jax.Array, axis_name: str
+) -> jax.Array:
+    """Merge per-shard online-logsumexp ``(m, s)`` carries into the
+    exact global ``logsumexp`` — the standard shifted-sum combine, the
+    LSE sibling of :func:`distributed_topk_from_local` for callers
+    whose per-shard carry comes from a streaming scorer
+    (``repro.eval``'s fused single-pass kernel) rather than a dense
+    local score matrix.
+
+    Parameters
+    ----------
+    m_l : (...,) f32
+        This shard's running max over its local (masked) columns —
+        ``NEG_INF``-valued rows (no valid local column) contribute
+        nothing.
+    s_l : (...,) f32
+        This shard's running ``Σ exp(logit − m_l)`` over the same
+        columns.
+    axis_name : str
+        Mesh axis the catalog/vocab columns are sharded over.
+
+    Returns
+    -------
+    (...,) f32 ``logsumexp`` over the full (global) column set,
+    replicated over ``axis_name``:
+    ``M = pmax(m_l); M + log(psum(s_l · exp(m_l − M)))``. The shift
+    keeps every ``exp`` argument ≤ 0, so shards with empty slices
+    (``m_l = NEG_INF``) fold in as exact zeros.
+
+    Notes
+    -----
+    Single-device fallback (no bound axis): ``m_l + log(s_l)``.
+    """
+    m = _axis_size(axis_name)
+    if m is None:
+        return m_l + jnp.log(s_l)
+    _record("all-reduce", axis_name, m_l.shape, m_l.dtype, m)
+    _record("all-reduce", axis_name, s_l.shape, s_l.dtype, m)
+    m_g = jax.lax.pmax(m_l, axis_name)
+    s_g = jax.lax.psum(s_l * jnp.exp(m_l - m_g), axis_name)
+    return m_g + jnp.log(s_g)
 
 
 def distributed_topk(

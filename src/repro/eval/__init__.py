@@ -7,9 +7,13 @@ Krichene & Rendle's critique of sampled evaluation, so the catalog can't
 be subsampled; it has to be *streamed*).
 
 Layers:
-  ``kernels/eval_topk.py`` — Pallas streaming rank-and-topk (+ the
-      bitwise-consistent target-score extractor); chunked pure-jnp
-      reference in ``kernels/ref.py``.
+  ``kernels/eval_fused.py`` — Pallas fused single-pass scorer: ONE
+      catalog matmul sweep carries the top-k merge buffer, the rank
+      counts and the online-LSE NLL carry, with the bitwise-exact
+      target score from a tile-shaped gather pre-stage; chunked
+      pure-jnp reference in ``kernels/ref.py`` (the superseded
+      two-pass ``kernels/eval_topk.py`` survives as the
+      differential-test oracle).
   ``streaming``            — scorer front-end + incremental metric
       accumulators + the analytic memory models.
   ``harness``              — protocol drivers: leave-one-out
@@ -40,6 +44,7 @@ from repro.eval.streaming import (
     eval_peak_elements,
     lm_eval_peak_elements,
     ranks_from_counts,
+    streaming_eval_scores,
     streaming_rank_topk,
 )
 
@@ -58,5 +63,6 @@ __all__ = [
     "lm_targets_and_valid",
     "ranks_from_counts",
     "sasrec_score_fn",
+    "streaming_eval_scores",
     "streaming_rank_topk",
 ]

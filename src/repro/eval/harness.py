@@ -22,12 +22,16 @@ protocol, driven by :func:`evaluate_streaming_lm`).
 
 Sharded path: with a ``mesh``, scoring runs under ``shard_map`` — batch
 rows over the data axes, catalog rows over ``model``
-(``dist.sharding.catalog_spec``) — each model shard streams its slice
-(chunked reference; interpret-mode Pallas cannot run under shard_map,
-see ``kernels/ops.py``), target scores and rank counts ``psum`` across
-``model``, and per-shard top-k candidates merge through
-``dist.collectives.distributed_topk_from_local``. Per-device peak stays
-``O(B_local·(K + block))``.
+(``dist.sharding.catalog_spec``) — each model shard runs ONE fused
+streaming sweep over its slice (chunked reference; interpret-mode
+Pallas cannot run under shard_map, see ``kernels/ops.py``) after a
+cheap psum'd ``eval_tgt_gather`` pre-stage supplies the full-catalog
+target score; rank counts ``psum`` across ``model``, per-shard top-k
+candidates merge through
+``dist.collectives.distributed_topk_from_local``, and the LM NLL's
+per-shard online-LSE carries merge through
+``dist.collectives.distributed_lse_from_local`` (shifted-sum
+psum/pmax). Per-device peak stays ``O(B_local·(K + block))``.
 """
 from __future__ import annotations
 
@@ -39,13 +43,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dist import set_mesh, shard_map
-from repro.dist.collectives import distributed_topk_from_local
+from repro.dist.collectives import (
+    distributed_lse_from_local,
+    distributed_topk_from_local,
+)
 from repro.dist.sharding import batch_spec, catalog_spec, data_axes
 from repro.eval.streaming import (
     MetricAccumulator,
     TokenRankAccumulator,
     ranks_from_counts,
-    streaming_rank_topk,
+    streaming_eval_scores,
 )
 from repro.kernels import ops
 
@@ -178,7 +185,7 @@ def evaluate_streaming(
 
     if mesh is None:
         states, catalog = score_fn(params, jnp.asarray(tokens))
-        vals, ids, gt, eq = streaming_rank_topk(
+        vals, ids, gt, eq, _tgt, _m, _s = streaming_eval_scores(
             states, catalog, jnp.asarray(targets), k,
             block_b=block_b, block_c=block_c,
             c_lo=1, c_hi=cfg.n_items,
@@ -200,8 +207,10 @@ def evaluate_streaming(
 _SHARDED_FNS: Dict[tuple, Callable] = {}
 
 
-def _sharded_eval_fn(mesh, k, block_c, c_lo, c_hi):
-    cache_key = (mesh, k, block_c, c_lo, c_hi)
+def _sharded_eval_fn(
+    mesh, k, block_c, c_lo, c_hi, with_lse, logit_softcap
+):
+    cache_key = (mesh, k, block_c, c_lo, c_hi, with_lse, logit_softcap)
     fn = _SHARDED_FNS.get(cache_key)
     if fn is not None:
         return fn
@@ -209,22 +218,31 @@ def _sharded_eval_fn(mesh, k, block_c, c_lo, c_hi):
     def inner(x_l, y_l, t_l):
         c_local = y_l.shape[0]
         offset = jax.lax.axis_index("model") * c_local
-        # target score from the shard that owns the row (others add 0)
+        # Target score from the shard that owns the row (others add 0)
+        # — the cheap tile-shaped gather matmul, NOT a catalog sweep,
+        # psum'd BEFORE the sweep so every shard compares its local
+        # columns against the full-catalog target score.
         tgt = jax.lax.psum(
-            ops.eval_tgt_scores(
+            ops.eval_tgt_gather(
                 x_l, y_l, t_l, block_c=block_c, id_offset=offset
             ),
             "model",
         )
-        vals_l, ids_l, gt_l, eq_l = ops.eval_topk(
-            x_l, y_l, tgt, k,
-            block_c=block_c, c_lo=c_lo, c_hi=c_hi, id_offset=offset,
+        vals_l, ids_l, gt_l, eq_l, _t, m_l, s_l = ops.eval_fused(
+            x_l, y_l, t_l, k,
+            tgt_scores=tgt, block_c=block_c, c_lo=c_lo, c_hi=c_hi,
+            id_offset=offset, logit_softcap=logit_softcap,
+            with_lse=with_lse,
         )
         gt = jax.lax.psum(gt_l, "model")
         eq = jax.lax.psum(eq_l, "model")
         vals, gids = distributed_topk_from_local(vals_l, ids_l, k, "model")
-        return vals, gids, gt, eq
+        if with_lse:
+            lse = distributed_lse_from_local(m_l, s_l, "model")
+            return vals, gids, gt, eq, tgt, lse
+        return vals, gids, gt, eq, tgt
 
+    n_row_outs = 4 if with_lse else 3  # gt, eq, tgt (+ lse)
     fn = jax.jit(shard_map(
         inner,
         mesh=mesh,
@@ -236,21 +254,26 @@ def _sharded_eval_fn(mesh, k, block_c, c_lo, c_hi):
         out_specs=(
             batch_spec(mesh, 2),
             batch_spec(mesh, 2),
-            batch_spec(mesh, 1),
-            batch_spec(mesh, 1),
-        ),
+        ) + (batch_spec(mesh, 1),) * n_row_outs,
     ))
     _SHARDED_FNS[cache_key] = fn
     return fn
 
 
 def _rank_topk_sharded(
-    states, catalog, targets, k, *, mesh, block_c, c_lo, c_hi
+    states, catalog, targets, k, *, mesh, block_c, c_lo, c_hi,
+    with_lse=False, logit_softcap=None,
 ):
-    """shard_map rank-and-topk over precomputed eval rows: per-model-
-    shard streaming over the local catalog slice, psum'd rank counts,
-    two-stage top-k merge. Rows are padded to the data-axis product by
-    repeating the last row (dropped after scoring)."""
+    """shard_map fused scoring over precomputed eval rows: ONE
+    per-model-shard catalog sweep (after the cheap psum'd
+    ``eval_tgt_gather`` pre-stage), psum'd rank counts, two-stage top-k
+    merge, and — with ``with_lse`` — the shifted-sum psum/pmax LSE
+    merge (``distributed_lse_from_local``) that replaces the old
+    replicated ``ce_chunked`` V-sweep. Rows are padded to the data-axis
+    product by repeating the last row (dropped after scoring).
+
+    Returns ``(vals, ids, gt, eq, tgt)`` — plus ``lse`` when
+    ``with_lse``."""
     dp = math.prod(mesh.shape[ax] for ax in data_axes(mesh)) or 1
     b = states.shape[0]
     pad = (-b) % dp
@@ -260,14 +283,14 @@ def _rank_topk_sharded(
             [np.asarray(targets), np.asarray(targets)[-1:].repeat(pad, 0)]
         )
 
-    fn = _sharded_eval_fn(mesh, k, block_c, c_lo, c_hi)
+    fn = _sharded_eval_fn(
+        mesh, k, block_c, c_lo, c_hi, with_lse, logit_softcap
+    )
     with set_mesh(mesh):
-        vals, ids, gt, eq = fn(
-            states, catalog, jnp.asarray(targets, jnp.int32)
-        )
+        outs = fn(states, catalog, jnp.asarray(targets, jnp.int32))
     if pad:
-        return vals[:b], ids[:b], gt[:b], eq[:b]
-    return vals, ids, gt, eq
+        outs = tuple(o[:b] for o in outs)
+    return outs
 
 
 def _evaluate_sharded(
@@ -275,10 +298,11 @@ def _evaluate_sharded(
 ):
     """Leave-one-out sharded scoring: one eval row per kept sequence."""
     states, catalog = score_fn(params, jnp.asarray(tokens))
-    return _rank_topk_sharded(
+    vals, ids, gt, eq, _tgt = _rank_topk_sharded(
         states, catalog, targets, k,
         mesh=mesh, block_c=block_c, c_lo=1, c_hi=cfg.n_items,
     )
+    return vals, ids, gt, eq
 
 
 # ---------------------------------------------------------------------------
@@ -322,18 +346,21 @@ def evaluate_streaming_lm(
 
     The LM twin of :func:`evaluate_streaming`: one
     ``transformer.forward`` pass produces ``(B·T, d)`` eval rows
-    (:func:`lm_score_fn`); the streamed catalog pass yields each
-    position's target-token rank (pessimistic ties, ``c_lo=1`` /
+    (:func:`lm_score_fn`); ONE fused catalog sweep
+    (``streaming_eval_scores`` with the online-LSE carry on) yields
+    each position's target-token rank (pessimistic ties, ``c_lo=1`` /
     ``c_hi=cfg.vocab`` masking the pad id and the phantom padded vocab
     rows — a rank-only ``k=1`` pass, since no token-rank metric needs
-    recommended ids); padding / final positions are dropped by the
-    validity mask before folding into the
-    :class:`TokenRankAccumulator`. The next-token ``loss`` is the
-    chunked online-LSE CE over the real vocabulary excluding the pad id
-    (``y[1:V]``, targets shifted by 1) — peak ``B·T·block_c`` elements,
-    never ``B·T·V``. gemma-2-style final-logit softcaps are monotone
-    and therefore rank-invariant (ranks use raw logits), but CE is not:
-    the cap is applied inside the chunked loss scan, so the reported
+    recommended ids) AND its next-token NLL: ``lse − softcap(tgt)``
+    over the real vocabulary excluding the pad id, peak
+    ``B·T·block_c`` elements, never ``B·T·V``. The pre-PR-5 stack
+    streamed the vocab matmul three times here (target pass + rank
+    pass + a separate ``ce_chunked`` scan); the fused sweep streams it
+    once. Padding / final positions are dropped by the validity mask
+    before folding into the :class:`TokenRankAccumulator`.
+    gemma-2-style final-logit softcaps are monotone and therefore
+    rank-invariant (ranks use raw logits), but CE is not: the cap is
+    applied to the LSE carry inside the streamed tile, so the reported
     loss is the model's actual next-token NLL.
 
     Parameters
@@ -356,9 +383,12 @@ def evaluate_streaming_lm(
     Returns
     -------
     dict — ``hr@k`` / ``ndcg@k`` / ``mean_rank`` / ``loss`` /
-    ``n_tokens`` (see ``TokenRankAccumulator.result``).
+    ``n_tokens`` (see ``TokenRankAccumulator.result``). The sharded
+    ``loss`` merges per-shard LSE carries exactly (shifted-sum
+    psum/pmax); it can differ from the single-device fold order by f32
+    rounding only.
     """
-    from repro.core.losses import ce_chunked
+    from repro.core.sce import apply_softcap
 
     tokens = np.asarray(eval_batch["tokens"])
     if "targets" in eval_batch and "valid" in eval_batch:
@@ -373,33 +403,34 @@ def evaluate_streaming_lm(
 
     # Every token-rank metric is a function of the rank counts alone
     # (TokenRankAccumulator folds no ids — there is no COV here), so
-    # the streamed pass runs with k=1: the top-k merge recurrence costs
-    # K unrolled rounds per tile, all discarded beyond the counts.
+    # the fused sweep runs with k=1: the top-k merge recurrence costs
+    # one round per tile, discarded beyond the counts. The same sweep
+    # carries the online-LSE NLL accumulator — the columns it masks
+    # ([1, V): no pad id, no phantom rows) are exactly the NLL's
+    # candidate set, so rank pass and loss pass collapse into one.
+    cap = getattr(cfg, "final_softcap", None)
     states, catalog = lm_score_fn(cfg)(params, jnp.asarray(tokens))
     if mesh is None:
-        _, _, gt, eq = streaming_rank_topk(
+        _, _, gt, eq, tgt, m, s = streaming_eval_scores(
             states, catalog, t_flat, 1,
             block_b=block_b, block_c=block_c,
             c_lo=1, c_hi=cfg.vocab,
             impl=impl, interpret=interpret,
+            with_lse=True, logit_softcap=cap,
         )
+        lse = jnp.asarray(m) + jnp.log(jnp.asarray(s))
     else:
-        _, _, gt, eq = _rank_topk_sharded(
+        _, _, gt, eq, tgt, lse = _rank_topk_sharded(
             states, catalog, t_flat, 1,
             mesh=mesh, block_c=block_c, c_lo=1, c_hi=cfg.vocab,
+            with_lse=True, logit_softcap=cap,
         )
     ranks = ranks_from_counts(gt, eq)[v_flat]
 
-    # Next-token NLL over the real vocab minus the pad id: slice the
-    # table (a view, not a copy) and shift targets — invalid rows are
-    # masked out of the mean, so their (clipped) gather is harmless.
-    # Softcapped archs (gemma-2) get the cap applied inside the chunked
-    # scan: ranks are softcap-invariant but the CE is not.
-    nll_mean, _ = ce_chunked(
-        states, catalog[1:cfg.vocab], t_flat - 1,
-        valid_mask=jnp.asarray(v_flat), chunk_size=block_c,
-        logit_softcap=getattr(cfg, "final_softcap", None),
-    )
+    # Next-token NLL from the sweep's own carries: lse − softcap(tgt).
+    # Invalid rows (pad targets) carry a garbage tgt — they are
+    # dropped by the validity mask before the fold, never reported.
+    nll = np.asarray(lse) - np.asarray(apply_softcap(jnp.asarray(tgt), cap))
     acc = accumulator or TokenRankAccumulator(ks, cfg.vocab)
-    acc.update(ranks, nll_sum=float(nll_mean) * int(v_flat.sum()))
+    acc.update(ranks, nll_sum=float(nll[v_flat].sum()))
     return acc.result()

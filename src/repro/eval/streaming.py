@@ -10,10 +10,18 @@ evaluation never materializes the ``(B, C)`` score matrix the old
 paper's loss-memory argument; RECE makes the same move on the loss side
 by chunking).
 
+Scoring is ONE fused catalog sweep (``kernels/eval_fused.py``, PR 5):
+a single matmul per catalog tile feeds the top-k merge buffer, the
+rank counts, the target score and (for the LM protocol) the online-LSE
+NLL carry — where the original stack streamed the same matmul twice
+(target pass + rank pass) or three times (LM, + the chunked NLL scan).
+The two-pass path survives only as the differential-test oracle in
+``repro.kernels``.
+
 Two interchangeable scorer implementations (same outputs, same tie
 rule):
 
-  * ``impl="kernel"`` — the Pallas ``kernels/eval_topk.py`` pair
+  * ``impl="kernel"`` — the Pallas ``kernels/eval_fused.py`` kernel
     (Mosaic on TPU; ``interpret=True`` elsewhere — bit-accurate but
     slow, for validation);
   * ``impl="ref"``    — the jit-compiled chunked ``kernels/ref.py``
@@ -34,18 +42,91 @@ from repro.kernels import ops, ref
 
 
 # ---------------------------------------------------------------------------
-# Streaming scorer
+# Streaming scorer — fused single-pass (one catalog matmul sweep)
 # ---------------------------------------------------------------------------
 @functools.partial(
-    jax.jit, static_argnames=("k", "chunk", "c_lo", "c_hi", "id_offset")
+    jax.jit,
+    static_argnames=(
+        "k", "chunk", "c_lo", "c_hi", "id_offset", "logit_softcap",
+        "with_lse",
+    ),
 )
-def _ref_rank_topk(x, y, targets, *, k, chunk, c_lo, c_hi, id_offset):
-    tgt = ref.eval_tgt_scores_ref(
-        x, y, targets, chunk=chunk, id_offset=id_offset
-    )
-    return ref.eval_topk_ref(
-        x, y, tgt, k,
+def _ref_fused(
+    x, y, targets, *, k, chunk, c_lo, c_hi, id_offset, logit_softcap,
+    with_lse,
+):
+    return ref.eval_fused_ref(
+        x, y, targets, k,
         chunk=chunk, c_lo=c_lo, c_hi=c_hi, id_offset=id_offset,
+        logit_softcap=logit_softcap, with_lse=with_lse,
+    )
+
+
+def streaming_eval_scores(
+    x,
+    y,
+    targets,
+    k: int,
+    *,
+    block_b: int = 128,
+    block_c: int = 512,
+    c_lo: int = 0,
+    c_hi: int | None = None,
+    id_offset: int = 0,
+    impl: str = "auto",
+    interpret: bool | None = None,
+    with_lse: bool = False,
+    logit_softcap: float | None = None,
+):
+    """Everything an eval protocol needs from ONE catalog sweep: top-k
+    ids/values, target rank counts, the target score, and (optionally)
+    the online-logsumexp carry — without ``(B, C)`` scores and without
+    the two-pass path's second (or the LM NLL's third) catalog matmul.
+
+    Parameters
+    ----------
+    x : (B, d) user states.
+    y : (C, d) catalog table (or shard; see ``id_offset``).
+    targets : (B,) i32 global ids of the held-out items.
+    k : top-k size (``max(ks)`` of the metrics wanted).
+    block_b, block_c : tile sizes — peak live score elements are
+        ``B·(block_c + 2k)`` instead of ``B·C``.
+    c_lo, c_hi : valid global-id range (mask padding id 0 with
+        ``c_lo=1``, phantom padded rows with ``c_hi=n_items``).
+    impl : "kernel" | "ref" | "auto".
+    with_lse : also carry the f32 online-LSE ``(m, s)`` pair (the LM
+        next-token-NLL ridealong; ``lse = m + log s``).
+    logit_softcap : gemma-2 final-logit cap, applied to the LSE carry
+        inside the tile (ranks/top-k keep raw logits — the cap is
+        monotone, CE is not cap-invariant).
+
+    Returns
+    -------
+    (vals, ids, gt, eq, tgt, m, s) — see ``kernels.ops.eval_fused``
+    (``m``/``s`` are ``None`` unless ``with_lse``). The comparison
+    threshold comes from the tile-shaped gather matmul
+    (``eval_tgt_gather`` — never a gather-einsum), bitwise-identical
+    to the swept target column, so ``ranks_from_counts(gt, eq)``
+    reproduces the dense oracle's ranks exactly.
+    """
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        c_hi_static = (
+            id_offset + y.shape[0] if c_hi is None else c_hi
+        )
+        return _ref_fused(
+            x, y, targets,
+            k=k, chunk=block_c, c_lo=c_lo, c_hi=c_hi_static,
+            id_offset=id_offset, logit_softcap=logit_softcap,
+            with_lse=with_lse,
+        )
+    return ops.eval_fused(
+        x, y, targets, k,
+        block_b=block_b, block_c=block_c,
+        c_lo=c_lo, c_hi=c_hi, id_offset=id_offset,
+        logit_softcap=logit_softcap, with_lse=with_lse,
+        interpret=interpret,
     )
 
 
@@ -63,49 +144,22 @@ def streaming_rank_topk(
     impl: str = "auto",
     interpret: bool | None = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Top-k ids/values + target rank counts without ``(B, C)`` scores.
+    """Top-k ids/values + target rank counts without ``(B, C)`` scores
+    — the rank-metrics slice of :func:`streaming_eval_scores` (one
+    fused sweep; the pre-PR-5 two-pass implementation survives only as
+    the ``kernels.ops.eval_tgt_scores`` → ``eval_topk`` oracle the
+    differential tests pin this path against).
 
-    Parameters
-    ----------
-    x : (B, d) user states.
-    y : (C, d) catalog table (or shard; see ``id_offset``).
-    targets : (B,) i32 global ids of the held-out items.
-    k : top-k size (``max(ks)`` of the metrics wanted).
-    block_b, block_c : tile sizes — peak live score elements are
-        ``B·(block_c + 2k)`` instead of ``B·C``.
-    c_lo, c_hi : valid global-id range (mask padding id 0 with
-        ``c_lo=1``, phantom padded rows with ``c_hi=n_items``).
-    impl : "kernel" | "ref" | "auto".
-
-    Returns
-    -------
-    (vals, ids, gt, eq) — see ``kernels.ops.eval_topk``. The target
-    score is extracted from the same streamed matmul (never a separate
-    gather-einsum), so ``gt``/``eq`` are bitwise-consistent with the
-    streamed scores — ``ranks_from_counts(gt, eq)`` reproduces the
-    dense oracle's ranks exactly.
+    Returns ``(vals, ids, gt, eq)`` — bit-identical to the two-pass
+    path, tie order included.
     """
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
-    if impl == "ref":
-        c_hi_static = (
-            id_offset + y.shape[0] if c_hi is None else c_hi
-        )
-        return _ref_rank_topk(
-            x, y, targets,
-            k=k, chunk=block_c, c_lo=c_lo, c_hi=c_hi_static,
-            id_offset=id_offset,
-        )
-    tgt = ops.eval_tgt_scores(
-        x, y, targets,
+    vals, ids, gt, eq, _tgt, _m, _s = streaming_eval_scores(
+        x, y, targets, k,
         block_b=block_b, block_c=block_c,
-        id_offset=id_offset, interpret=interpret,
+        c_lo=c_lo, c_hi=c_hi, id_offset=id_offset,
+        impl=impl, interpret=interpret, with_lse=False,
     )
-    return ops.eval_topk(
-        x, y, tgt, k,
-        block_b=block_b, block_c=block_c,
-        c_lo=c_lo, c_hi=c_hi, id_offset=id_offset, interpret=interpret,
-    )
+    return vals, ids, gt, eq
 
 
 def ranks_from_counts(gt, eq):
@@ -223,8 +277,8 @@ class TokenRankAccumulator:
             (``ranks_from_counts`` over the valid positions only —
             padding and final positions are dropped BEFORE folding).
         nll_sum : optional summed next-token NLL over the same
-            positions (from the chunked online-LSE CE — never a
-            ``(B·T, V)`` tensor).
+            positions (from the fused sweep's online-LSE carry —
+            never a ``(B·T, V)`` tensor).
         """
         ranks = np.asarray(ranks)
         self.n_tokens += len(ranks)
@@ -261,7 +315,10 @@ def eval_peak_elements(batch: int, k: int, block_c: int = 512) -> int:
     streaming_topk_elements``, the same model that prices the fused
     MIPS selection in ``core.sce.sce_peak_elements``) + the ``(B,)``
     ``gt``/``eq`` count pair. ``O(B·(K + block))``, independent of
-    ``C``."""
+    ``C``. The fused single-pass scorer carries exactly this — its
+    target threshold is an input (the ``eval_tgt_gather`` pre-stage),
+    not an extra accumulator, so fusing the two sweeps into one left
+    the peak unchanged while halving catalog matmul FLOPs/traffic."""
     from repro.kernels.topk_merge import streaming_topk_elements
 
     return streaming_topk_elements(batch, k, block_c) + 2 * batch
@@ -285,10 +342,12 @@ def lm_eval_peak_elements(
     smoke of ``B=32, T=64, V=256k``. The streaming path carries the
     shared top-k term (``topk_merge.streaming_topk_elements`` — one
     ``(rows, block_c)`` tile + the ``(rows, k)`` merge buffers) plus
-    four ``(rows,)`` vectors: the ``gt``/``eq`` rank counts, the target
-    scores, and the online-LSE carry of the chunked next-token NLL
-    (whose own ``(rows, block_c)`` tile is not live at the same time as
-    the rank pass). ``O(B·T·(K + block))``, independent of ``V``."""
+    four ``(rows,)`` vectors: the ``gt``/``eq`` rank counts and the
+    fused sweep's online-LSE ``(m, s)`` NLL carry (the target
+    threshold is an input from the ``eval_tgt_gather`` pre-stage, not
+    an accumulator — so the single-sweep fusion that deleted the
+    separate rank-pass and ``ce_chunked`` tiles kept this model
+    intact). ``O(B·T·(K + block))``, independent of ``V``."""
     from repro.kernels.topk_merge import streaming_topk_elements
 
     rows = batch * seq_len

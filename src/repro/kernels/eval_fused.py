@@ -1,0 +1,425 @@
+"""Fused single-pass streaming eval scorer — Pallas TPU kernel.
+
+Collapses the evaluation stack's repeated catalog sweeps into ONE. The
+two-pass path (``kernels/eval_topk.py``) streams the same
+``(B, d) @ (d, C)`` matmul twice — once to extract each row's target
+score (``eval_tgt_scores``), once for the rank counts and top-k
+(``eval_topk``) — and the LM token-rank protocol added a third V-wide
+sweep for the chunked online-LSE NLL (``core.losses.ce_chunked``). The
+scoring matmul, not the reduction, dominates eval cost at large
+catalogs (RECE, Gusak et al. 2024; Zhelnin et al. 2025), so every
+duplicated sweep is pure FLOP/HBM waste. Here one matmul per
+``(block_c, d)`` tile feeds **four accumulators**:
+
+  * ``(topk_vals, topk_ids)`` — the ``(block_b, K)`` merge buffer
+    (shared ``kernels/topk_merge.py`` recurrence, dense-``lax.top_k``
+    tie order);
+  * ``(gt, eq)`` — rank counts vs the target score (raw logits: ranks
+    are softcap-invariant);
+  * an optional f32 online-LSE ``(m, s)`` carry over the *softcapped*
+    logits (CE is NOT cap-invariant, so the cap is applied inside the
+    tile) — the LM NLL without its own sweep.
+
+Why the target score must be an input (the single-pass obstruction)
+-------------------------------------------------------------------
+``gt``/``eq`` compare every catalog score against the target score, but
+a forward sweep only reveals the target's column when its tile streams
+by — comparisons for earlier tiles would need the full prefix score
+multiset, which no ``O(B·K)`` carry can hold exactly. An exact single
+sweep therefore requires the target score BEFORE tile 0.
+
+The cheap way out is :func:`eval_tgt_gather`: gather each row's target
+embedding into a **tile-shaped** ``(block_c, d)`` buffer (row ``r`` of
+the buffer = row-block row ``r``'s target) and run the *same*
+``(block_b, d) @ (d, block_c)`` ``jnp.dot`` the sweep runs. A gemm's
+per-element reduction order depends on the operand shapes, not on the
+column position or the other columns' contents (MXU: one systolic
+schedule per shape; XLA:CPU: one blocked loop nest per shape), so the
+extracted slot is **bitwise identical** to the value the sweep computes
+for that target's column — the consistency property that motivated
+``eval_tgt_scores``, now at ``O(B·block_c·d)`` FLOPs instead of a full
+``O(B·C·d)`` sweep. (A gather-einsum is NOT safe: measured 1-ulp
+mismatches on ~15–25% of rows — see KERNELS.md §eval_topk.) The
+equality tests pin this bit-for-bit against ``eval_tgt_scores``.
+
+Inside the sweep the target's own column is handled *structurally*
+(``col == target`` never counts into ``gt``, always counts into ``eq``
+when valid) — identical to the two-pass counts whenever the threshold
+is bit-exact (always, by the construction above) and preserving the
+``eq ≥ 1`` invariant even if a backend ever broke the same-shape-gemm
+assumption.
+
+Grid: ``(B/block_b, C/block_c)``, catalog innermost / sequential so the
+VMEM scratch carries across tiles. No backward pass — eval is
+inference-only. Peak live elements match ``eval_topk``'s
+``B·(block_c + 2K + 2)`` model (+ the ``(m, s)`` pair when the LSE
+carry is on).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.topk_merge import ID_PAD as _ID_PAD
+from repro.kernels.topk_merge import merge_topk_tile
+
+NEG_INF = -1e30
+
+
+def _softcap(logits, cap):
+    """gemma-2-style ``cap·tanh(logits/cap)`` (None = identity) —
+    duplicated from ``core.sce.apply_softcap`` to keep the kernel layer
+    import-free of ``repro.core``."""
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def _tgt_gather_kernel(
+    tid_ref,  # (block_b,) i32 — local target row, -1 if not owned
+    x_ref,  # (block_b, d)
+    yg_ref,  # (block_c, d) — row r holds row r's target embedding
+    out_ref,  # (block_b,) f32 out
+    *,
+    block_b: int,
+):
+    # The SAME dot the sweep kernel runs — same (block_b, d, block_c)
+    # shape ⇒ same per-element reduction ⇒ bitwise-identical scores.
+    logits = jnp.dot(
+        x_ref[...], yg_ref[...].T, preferred_element_type=jnp.float32
+    )
+    row = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    hit = row == col  # row r's target sits in gather-tile row r
+    owned = (tid_ref[...] >= 0)[:, None]
+    out_ref[...] = jnp.sum(
+        jnp.where(jnp.logical_and(hit, owned), logits, 0.0), axis=-1
+    )
+
+
+def _fused_kernel(
+    tgt_ref,  # (block_b,) f32 target scores (the comparison threshold)
+    tid_ref,  # (block_b,) i32 global target ids (self-column rule)
+    x_ref,  # (block_b, d)
+    y_ref,  # (block_c, d)
+    *refs,  # outputs then scratch — see `with_lse` unpacking below
+    k: int,
+    n_c_tiles: int,
+    block_c: int,
+    c_actual: int,
+    c_lo: int,
+    c_hi: int,
+    id_offset: int,
+    logit_softcap,
+    with_lse: bool,
+):
+    if with_lse:
+        (vals_ref, ids_ref, gt_ref, eq_ref, m_ref, s_ref,
+         vals_scr, ids_scr, gt_scr, eq_scr, m_scr, s_scr) = refs
+    else:
+        (vals_ref, ids_ref, gt_ref, eq_ref,
+         vals_scr, ids_scr, gt_scr, eq_scr) = refs
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_scr[...] = jnp.full_like(vals_scr, NEG_INF)
+        ids_scr[...] = jnp.full_like(ids_scr, _ID_PAD)
+        gt_scr[...] = jnp.zeros_like(gt_scr)
+        eq_scr[...] = jnp.zeros_like(eq_scr)
+        if with_lse:
+            m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+            s_scr[...] = jnp.zeros_like(s_scr)
+
+    # THE one matmul per tile — every accumulator below reads it.
+    logits = jnp.dot(
+        x_ref[...], y_ref[...].T, preferred_element_type=jnp.float32
+    )
+    idx = j * block_c + jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, 1
+    )
+    col = id_offset + idx
+    # Mask padded-tail columns (idx ≥ C — their global ids may alias the
+    # next catalog shard's range) and ids outside [c_lo, c_hi).
+    valid = jnp.logical_and(
+        idx < c_actual, jnp.logical_and(col >= c_lo, col < c_hi)
+    )
+    s = jnp.where(valid, logits, NEG_INF)
+
+    # Rank counts vs the (bitwise-exact) threshold. The target's own
+    # column is excluded from gt and force-counted into eq structurally
+    # — a no-op vs plain (>, ==) when the threshold is exact, but it
+    # pins eq ≥ 1 independent of any backend's gemm determinism.
+    tgt = tgt_ref[...][:, None]  # (block_b, 1)
+    self_col = col == tid_ref[...][:, None]
+    gt_scr[...] += jnp.sum(
+        jnp.logical_and(s > tgt, jnp.logical_not(self_col)).astype(
+            jnp.int32
+        ),
+        axis=-1,
+    )
+    eq_scr[...] += jnp.sum(
+        jnp.logical_or(
+            s == tgt, jnp.logical_and(self_col, valid)
+        ).astype(jnp.int32),
+        axis=-1,
+    )
+
+    # Shared first-occurrence-argmax merge — raw logits, dense tie rule.
+    vals_scr[...], ids_scr[...] = merge_topk_tile(
+        vals_scr[...], ids_scr[...], s, col, k
+    )
+
+    if with_lse:
+        # Online logsumexp over the SOFTCAPPED logits (CE is not
+        # cap-invariant; ranks above keep the raw scores). Invalid
+        # columns contribute exactly 0 via the explicit where — never
+        # relying on exp(NEG_INF − NEG_INF) when a whole tile is masked.
+        lv = jnp.where(valid, _softcap(logits, logit_softcap), NEG_INF)
+        m_new = jnp.maximum(m_scr[...], jnp.max(lv, axis=-1))
+        s_scr[...] = s_scr[...] * jnp.exp(m_scr[...] - m_new) + jnp.sum(
+            jnp.where(valid, jnp.exp(lv - m_new[:, None]), 0.0), axis=-1
+        )
+        m_scr[...] = m_new
+
+    @pl.when(j == n_c_tiles - 1)
+    def _finalize():
+        vals_ref[...] = vals_scr[...].astype(vals_ref.dtype)
+        ids_ref[...] = ids_scr[...]
+        gt_ref[...] = gt_scr[...]
+        eq_ref[...] = eq_scr[...]
+        if with_lse:
+            m_ref[...] = m_scr[...]
+            s_ref[...] = s_scr[...]
+
+
+def _pad_to(arr, axis, multiple, value=0):
+    pad = (-arr.shape[axis]) % multiple
+    if pad == 0:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(arr, widths, constant_values=value)
+
+
+def eval_tgt_gather(
+    x,
+    y,
+    targets,
+    *,
+    block_b: int = 128,
+    block_c: int = 512,
+    id_offset: int = 0,
+    interpret: bool = False,
+):
+    """Each row's target-column score from a tile-SHAPED gather matmul —
+    bitwise identical to the column :func:`eval_fused`'s sweep computes
+    (same ``(block_b, d) @ (d, block_c)`` ``jnp.dot``; see the module
+    docstring for the shape-determinism argument), at
+    ``O(B·block_c·d)`` FLOPs instead of a catalog sweep.
+
+    Parameters
+    ----------
+    x : (B, d) user/query states.
+    y : (C, d) catalog table (or shard; ``id_offset`` = first row's
+        global id).
+    targets : (B,) i32 global catalog id of each row's held-out item.
+        Rows whose target falls outside ``y``'s id range contribute 0
+        (so a ``psum`` over catalog shards assembles the exact value —
+        the same contract as the deprecated ``eval_tgt_scores``).
+    block_b, block_c : MUST match the sweep call's blocks (that is what
+        makes the extraction bitwise-consistent); ``block_b`` is
+        clamped to ``block_c`` so every row block fits one gather tile.
+
+    Returns
+    -------
+    (B,) f32 target scores.
+    """
+    n, d = x.shape
+    c = y.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.float32)
+    block_c = min(block_c, c)
+    block_b = min(block_b, n, block_c)
+
+    local = targets.astype(jnp.int32) - id_offset
+    owned = jnp.logical_and(local >= 0, local < c)
+    rows = jnp.where(
+        owned[:, None], jnp.take(y, jnp.clip(local, 0, c - 1), axis=0), 0
+    )  # (B, d) — unowned rows zeroed (x · 0 ≡ 0 exactly)
+
+    xp = _pad_to(x, 0, block_b)
+    tidp = _pad_to(
+        jnp.where(owned, local, -1).astype(jnp.int32), 0, block_b,
+        value=-1,
+    )
+    n_p = xp.shape[0]
+    n_b = n_p // block_b
+    # (n_b, block_b, d) → column-pad each row block to a full
+    # (block_c, d) gather tile.
+    rows_p = _pad_to(rows, 0, block_b).reshape(n_b, block_b, d)
+    rows_p = _pad_to(rows_p, 1, block_c).reshape(n_b * block_c, d)
+
+    out = pl.pallas_call(
+        functools.partial(_tgt_gather_kernel, block_b=block_b),
+        grid=(n_b,),
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_c, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_p,), jnp.float32),
+        interpret=interpret,
+    )(tidp, xp, rows_p)
+    return out[:n]
+
+
+def eval_fused(
+    x,
+    y,
+    targets,
+    k: int,
+    *,
+    tgt_scores=None,
+    block_b: int = 128,
+    block_c: int = 512,
+    c_lo: int = 0,
+    c_hi: int | None = None,
+    id_offset: int = 0,
+    logit_softcap: float | None = None,
+    with_lse: bool = False,
+    interpret: bool = False,
+):
+    """Single-sweep streaming top-k + rank counts (+ online-LSE) over
+    the full catalog — one matmul per tile where the two-pass
+    ``eval_tgt_scores`` + ``eval_topk`` pair ran two (and the LM NLL a
+    third).
+
+    Parameters
+    ----------
+    x : (B, d) user/query states.
+    y : (C, d) catalog embedding table (or a shard of it).
+    targets : (B,) i32 global target ids.
+    k : number of top items to keep per row.
+    tgt_scores : optional (B,) f32 comparison threshold. Default: the
+        bitwise-exact :func:`eval_tgt_gather` over this ``y``. Sharded
+        callers pass the ``psum`` of per-shard gathers so every shard
+        compares against the full-catalog target score.
+    block_b, block_c : VMEM tile sizes.
+    c_lo, c_hi : half-open global-id validity window (defaults to
+        ``[0, id_offset + C)``); invalid columns are excluded from the
+        top-k, the rank counts AND the LSE.
+    logit_softcap : optional gemma-2 final-logit cap, applied to the
+        LSE carry *inside the tile* (ranks/top-k keep raw logits —
+        the cap is monotone, CE is not cap-invariant).
+    with_lse : carry the f32 online-LSE ``(m, s)`` pair (the LM NLL
+        ridealong); off for seqrec, where nothing consumes it.
+
+    Returns
+    -------
+    (vals, ids, gt, eq, tgt, m, s) :
+        ``vals``/``ids``/``gt``/``eq`` exactly as the two-pass
+        ``eval_topk`` (bit-for-bit, tie order included); ``tgt`` the
+        (B,) threshold actually compared against; ``m``/``s`` the (B,)
+        online-LSE carry (``lse = m + log s``) or ``None`` when
+        ``with_lse=False``.
+    """
+    n, d = x.shape
+    c = y.shape[0]
+    if c_hi is None:
+        c_hi = id_offset + c
+    if n == 0:  # fully-filtered eval batch — mirror the ref's empties
+        z = jnp.zeros((0,), jnp.float32)
+        return (
+            jnp.zeros((0, k), jnp.float32),
+            jnp.zeros((0, k), jnp.int32),
+            jnp.zeros((0,), jnp.int32),
+            jnp.zeros((0,), jnp.int32),
+            z,
+            z if with_lse else None,
+            z if with_lse else None,
+        )
+    block_c = min(block_c, c)
+    block_b = min(block_b, n, block_c)
+
+    if tgt_scores is None:
+        tgt_scores = eval_tgt_gather(
+            x, y, targets,
+            block_b=block_b, block_c=block_c,
+            id_offset=id_offset, interpret=interpret,
+        )
+
+    xp = _pad_to(x, 0, block_b)
+    yp = _pad_to(y, 0, block_c)
+    tp = _pad_to(tgt_scores.astype(jnp.float32), 0, block_b)
+    tidp = _pad_to(targets.astype(jnp.int32), 0, block_b, value=-1)
+    n_p, c_p = xp.shape[0], yp.shape[0]
+    n_b, n_c = n_p // block_b, c_p // block_c
+
+    kernel = functools.partial(
+        _fused_kernel,
+        k=k,
+        n_c_tiles=n_c,
+        block_c=block_c,
+        c_actual=c,
+        c_lo=c_lo,
+        c_hi=c_hi,
+        id_offset=id_offset,
+        logit_softcap=logit_softcap,
+        with_lse=with_lse,
+    )
+    out_specs = [
+        pl.BlockSpec((block_b, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_b, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_b,), lambda i, j: (i,)),
+        pl.BlockSpec((block_b,), lambda i, j: (i,)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((n_p, k), jnp.float32),
+        jax.ShapeDtypeStruct((n_p, k), jnp.int32),
+        jax.ShapeDtypeStruct((n_p,), jnp.int32),
+        jax.ShapeDtypeStruct((n_p,), jnp.int32),
+    ]
+    scratch = [
+        pltpu.VMEM((block_b, k), jnp.float32),
+        pltpu.VMEM((block_b, k), jnp.int32),
+        pltpu.VMEM((block_b,), jnp.int32),
+        pltpu.VMEM((block_b,), jnp.int32),
+    ]
+    if with_lse:
+        out_specs += [
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((n_p,), jnp.float32),
+            jax.ShapeDtypeStruct((n_p,), jnp.float32),
+        ]
+        scratch += [
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.float32),
+        ]
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=(n_b, n_c),
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((block_b, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_c, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(tp, tidp, xp, yp)
+    vals, ids, gt, eq = (o[:n] for o in outs[:4])
+    m = outs[4][:n] if with_lse else None
+    s = outs[5][:n] if with_lse else None
+    return vals, ids, gt, eq, tgt_scores, m, s

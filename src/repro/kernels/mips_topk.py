@@ -39,9 +39,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.topk_merge import merge_topk_tile
+from repro.kernels.topk_merge import merge_topk_tile, merge_topk_tile_bitonic
 
 NEG_INF = -1e30
+
+_MERGE_IMPLS = {
+    "rounds": merge_topk_tile,
+    "bitonic": merge_topk_tile_bitonic,
+}
 
 
 def _mips_kernel(
@@ -58,6 +63,7 @@ def _mips_kernel(
     block_c: int,
     c_actual: int,
     id_offset: int,
+    merge_impl: str,
 ):
     j = pl.program_id(1)
 
@@ -79,7 +85,7 @@ def _mips_kernel(
     ok = jnp.logical_and(idx < c_actual, valid_ref[...][None, :] > 0)
     s = jnp.where(ok, scores, NEG_INF)
 
-    vals_scr[...], ids_scr[...] = merge_topk_tile(
+    vals_scr[...], ids_scr[...] = _MERGE_IMPLS[merge_impl](
         vals_scr[...], ids_scr[...], s, id_offset + idx, k
     )
 
@@ -107,6 +113,7 @@ def mips_topk(
     block_q: int = 128,
     block_c: int = 512,
     id_offset: int = 0,
+    merge_impl: str = "rounds",
     interpret: bool = False,
 ):
     """Streaming per-row top-``k`` of ``q @ yᵀ`` without the ``(n_q, C)``
@@ -125,6 +132,10 @@ def mips_topk(
     block_q, block_c : VMEM tile sizes; peak live score elements are
         ``n_q·(block_c + 2k)`` instead of ``n_q·C``.
     id_offset : global id of ``y``'s first row (for catalog shards).
+    merge_impl : ``"rounds"`` (default — the shared K-round
+        first-occurrence-argmax) or ``"bitonic"`` (the prototype
+        partial sort for selection-sized ``K = b_y``; identical
+        outputs, see ``topk_merge.merge_topk_tile_bitonic``).
 
     Returns
     -------
@@ -154,6 +165,7 @@ def mips_topk(
         block_c=block_c,
         c_actual=c,
         id_offset=id_offset,
+        merge_impl=merge_impl,
     )
     vals, ids = pl.pallas_call(
         kernel,

@@ -7,16 +7,25 @@ real TPU backend they compile to Mosaic.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import eval_fused as _eval_fused
 from repro.kernels import eval_topk as _eval_topk
 from repro.kernels import fused_ce as _fused_ce
 from repro.kernels import mips_topk as _mips_topk
 from repro.kernels import ref as _ref
 from repro.kernels import sce_bucket as _sce_bucket
 from repro.kernels import sce_prefetch as _sce_prefetch
+
+_TWO_PASS_DEPRECATION = (
+    "the two-pass eval scorer ({name}) is deprecated as a production "
+    "entry point — it streams the catalog matmul once per pass where "
+    "kernels.ops.eval_fused streams it once TOTAL. It is retained only "
+    "as the oracle for the fused path's differential tests."
+)
 
 
 def _interpret_default() -> bool:
@@ -88,13 +97,19 @@ def mips_topk(
     block_q: int = 128,
     block_c: int = 512,
     id_offset: int = 0,
+    merge_impl: str = "rounds",
     interpret: bool | None = None,
 ):
     """Streaming per-row MIPS top-k of ``q @ yᵀ`` →
     ``(vals (n_q, k), ids (n_q, k))`` without the ``(n_q, C)`` score
     matrix. See kernels/mips_topk.py; inside ``shard_map`` (or with a
     traced ``id_offset``) the chunked pure-jnp reference runs instead —
-    same outputs and ``lax.top_k`` tie rule."""
+    same outputs and ``lax.top_k`` tie rule. ``merge_impl`` selects the
+    per-tile merge: ``"rounds"`` (default, the K-round
+    first-occurrence-argmax) or ``"bitonic"`` (the prototype partial
+    sort for selection-sized ``K = b_y`` — see
+    ``kernels/topk_merge.py``; identical outputs, differential-tested,
+    no default flip)."""
     if interpret is None:
         interpret = _interpret_default()
     traced_offset = not isinstance(id_offset, int)
@@ -105,7 +120,7 @@ def mips_topk(
     return _mips_topk.mips_topk(
         q, y, k,
         valid=valid, block_q=block_q, block_c=block_c,
-        id_offset=id_offset, interpret=interpret,
+        id_offset=id_offset, merge_impl=merge_impl, interpret=interpret,
     )
 
 
@@ -192,6 +207,85 @@ def fused_ce_loss(
     return _fused_ce.fused_ce_loss(x, y, targets, block_n, block_c, interpret)
 
 
+def eval_fused(
+    x,
+    y,
+    targets,
+    k: int,
+    *,
+    tgt_scores=None,
+    block_b: int = 128,
+    block_c: int = 512,
+    c_lo: int = 0,
+    c_hi: int | None = None,
+    id_offset: int = 0,
+    logit_softcap: float | None = None,
+    with_lse: bool = False,
+    interpret: bool | None = None,
+):
+    """Fused single-sweep eval scorer: top-k + target rank counts
+    (+ optional online-LSE carry) from ONE catalog matmul pass →
+    ``(vals (B,k), ids (B,k), gt (B,), eq (B,), tgt (B,), m, s)``
+    (``m``/``s`` None unless ``with_lse``; ``lse = m + log s``). The
+    production replacement for the deprecated two-pass
+    ``eval_tgt_scores`` → ``eval_topk`` chain — bit-identical ranks,
+    ids, tie order and target scores at half the catalog FLOPs/traffic
+    (a third, for the LM path, whose separate NLL sweep the LSE carry
+    absorbs). See kernels/eval_fused.py; inside ``shard_map`` (or with
+    a traced ``id_offset``) the chunked pure-jnp reference runs
+    instead — same outputs and tie rule. Sharded callers precompute
+    the threshold (``psum`` of per-shard :func:`eval_tgt_gather`) and
+    pass it via ``tgt_scores``."""
+    if interpret is None:
+        interpret = _interpret_default()
+    traced_offset = not isinstance(id_offset, int)
+    if traced_offset or (interpret and _inside_shard_map(x, y)):
+        return _ref.eval_fused_ref(
+            x, y, targets, k,
+            tgt_scores=tgt_scores, chunk=block_c, c_lo=c_lo, c_hi=c_hi,
+            id_offset=id_offset, logit_softcap=logit_softcap,
+            with_lse=with_lse,
+        )
+    return _eval_fused.eval_fused(
+        x, y, targets, k,
+        tgt_scores=tgt_scores, block_b=block_b, block_c=block_c,
+        c_lo=c_lo, c_hi=c_hi, id_offset=id_offset,
+        logit_softcap=logit_softcap, with_lse=with_lse,
+        interpret=interpret,
+    )
+
+
+def eval_tgt_gather(
+    x,
+    y,
+    targets,
+    *,
+    block_b: int = 128,
+    block_c: int = 512,
+    id_offset: int = 0,
+    interpret: bool | None = None,
+):
+    """Target-column scores from tile-shaped gather matmuls — bitwise
+    identical to the column :func:`eval_fused`'s sweep computes (same
+    gemm shape ⇒ same per-element reduction) at ``O(B·block_c·d)``
+    FLOPs instead of the deprecated ``eval_tgt_scores`` full sweep.
+    → (B,) f32; rows whose target falls outside ``y``'s id range
+    contribute 0, so a ``psum`` over catalog shards assembles the
+    exact value. Call with the SAME ``block_c`` as the sweep."""
+    if interpret is None:
+        interpret = _interpret_default()
+    traced_offset = not isinstance(id_offset, int)
+    if traced_offset or (interpret and _inside_shard_map(x, y)):
+        return _ref.eval_tgt_gather_ref(
+            x, y, targets, chunk=block_c, id_offset=id_offset
+        )
+    return _eval_fused.eval_tgt_gather(
+        x, y, targets,
+        block_b=block_b, block_c=block_c,
+        id_offset=id_offset, interpret=interpret,
+    )
+
+
 def eval_topk(
     x,
     y,
@@ -205,11 +299,16 @@ def eval_topk(
     id_offset: int = 0,
     interpret: bool | None = None,
 ):
-    """Streaming full-catalog top-k + target rank counts →
-    ``(vals (B,k), ids (B,k), gt (B,), eq (B,))``. See
+    """DEPRECATED two-pass rank-and-topk (oracle only — use
+    :func:`eval_fused`). Streaming full-catalog top-k + target rank
+    counts → ``(vals (B,k), ids (B,k), gt (B,), eq (B,))``. See
     kernels/eval_topk.py; inside ``shard_map`` (or with a traced
     ``id_offset``) the chunked pure-jnp reference runs instead — same
     outputs and tie rule."""
+    warnings.warn(
+        _TWO_PASS_DEPRECATION.format(name="eval_topk"),
+        DeprecationWarning, stacklevel=2,
+    )
     if interpret is None:
         interpret = _interpret_default()
     traced_offset = not isinstance(id_offset, int)
@@ -235,10 +334,16 @@ def eval_tgt_scores(
     id_offset: int = 0,
     interpret: bool | None = None,
 ):
-    """Target-column scores from the same streamed tile matmul
-    ``eval_topk`` runs (call with the SAME ``block_c`` so the counts it
-    feeds are bitwise-exact). → (B,) f32. Same shard_map / traced-offset
-    fallback to the chunked reference as ``eval_topk``."""
+    """DEPRECATED full-sweep target extraction (oracle only — use
+    :func:`eval_tgt_gather`, or just :func:`eval_fused`). Target-column
+    scores from the same streamed tile matmul ``eval_topk`` runs (call
+    with the SAME ``block_c`` so the counts it feeds are
+    bitwise-exact). → (B,) f32. Same shard_map / traced-offset fallback
+    to the chunked reference as ``eval_topk``."""
+    warnings.warn(
+        _TWO_PASS_DEPRECATION.format(name="eval_tgt_scores"),
+        DeprecationWarning, stacklevel=2,
+    )
     if interpret is None:
         interpret = _interpret_default()
     traced_offset = not isinstance(id_offset, int)

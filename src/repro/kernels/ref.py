@@ -225,6 +225,162 @@ def eval_tgt_scores_ref(
     return acc
 
 
+def eval_tgt_gather_ref(
+    x: jax.Array,  # (B, d)
+    y: jax.Array,  # (C, d)
+    targets: jax.Array,  # (B,) i32 global catalog ids
+    *,
+    chunk: int = 512,
+    id_offset=0,
+):
+    """Target-column scores from chunk-SHAPED gather matmuls — the
+    pure-jnp twin of ``kernels/eval_fused.eval_tgt_gather`` and the
+    single-sweep replacement for :func:`eval_tgt_scores_ref`.
+
+    Each row's target embedding is gathered into a ``(chunk, d)``
+    buffer (``ceil(B/chunk)`` of them) and scored with the *same*
+    ``(B, d) @ (d, chunk)`` matmul :func:`eval_fused_ref`'s scan runs —
+    a gemm's per-element reduction depends on the operand shapes, not
+    the column position or the other columns, so the extracted slot is
+    bitwise identical to the sweep's target column (the property that
+    motivated the deprecated full-sweep ``eval_tgt_scores_ref``) at
+    ``O(B·ceil(B/chunk)·chunk·d)`` FLOPs instead of ``O(B·C·d)``.
+    Rows whose target lies outside ``y``'s id range contribute 0 (so a
+    ``psum`` over catalog shards assembles the exact score). → (B,)
+    f32.
+    """
+    b, d = x.shape
+    c = y.shape[0]
+    if b == 0:
+        return jnp.zeros((0,), jnp.float32)
+    chunk = min(chunk, c)
+    local = targets.astype(jnp.int32) - id_offset
+    owned = jnp.logical_and(local >= 0, local < c)
+    rows = jnp.where(
+        owned[:, None], jnp.take(y, jnp.clip(local, 0, c - 1), axis=0), 0
+    )  # (B, d) — unowned rows zeroed (x · 0 ≡ 0 exactly)
+    n_g = -(-b // chunk)
+    pad = n_g * chunk - b
+    rows_p = jnp.pad(rows, ((0, pad), (0, 0))).reshape(n_g, chunk, d)
+    f32 = jnp.float32
+    x32 = x.astype(f32)
+
+    def body(_, rg):
+        return _, x32 @ rg.astype(f32).T  # (B, chunk) — the sweep shape
+
+    _, ss = jax.lax.scan(body, 0, rows_p)  # (n_g, B, chunk)
+    i = jnp.arange(b)
+    return ss[i // chunk, i, i % chunk]
+
+
+def eval_fused_ref(
+    x: jax.Array,  # (B, d)
+    y: jax.Array,  # (C, d) catalog (or a catalog shard)
+    targets: jax.Array,  # (B,) i32 global target ids
+    k: int,
+    *,
+    tgt_scores=None,  # optional (B,) f32 threshold (sharded: psum'd)
+    chunk: int = 512,
+    c_lo: int = 0,
+    c_hi=None,
+    id_offset=0,
+    logit_softcap=None,
+    with_lse: bool = False,
+):
+    """Single-sweep streaming top-k + rank counts (+ online-LSE) —
+    pure-jnp oracle for ``kernels/eval_fused.py`` (and the path used
+    inside ``shard_map`` / with a traced ``id_offset``, see
+    ``kernels/ops.py``).
+
+    One ``lax.scan`` over ``(chunk, d)`` catalog slices carrying
+    ``(topk_vals, topk_ids, gt, eq[, m, s])`` — one matmul per chunk
+    where the two-pass :func:`eval_tgt_scores_ref` +
+    :func:`eval_topk_ref` pair ran two. The comparison threshold
+    defaults to the bitwise-exact :func:`eval_tgt_gather_ref`; the
+    target's own column is excluded from ``gt`` and force-counted into
+    ``eq`` structurally (a no-op vs plain ``>``/``==`` while the
+    threshold is bit-exact, and it pins ``eq ≥ 1`` regardless).
+    ``logit_softcap`` applies to the LSE carry only (CE is not
+    cap-invariant; ranks are, so they keep raw logits).
+
+    Returns ``(vals, ids, gt, eq, tgt, m, s)`` with ``m``/``s`` None
+    when ``with_lse=False``; the first four match the two-pass path
+    bit-for-bit, ``lse = m + log s``.
+    """
+    b, _ = x.shape
+    c = y.shape[0]
+    if c_hi is None:
+        c_hi = id_offset + c
+    chunk = min(chunk, c)
+    if tgt_scores is None:
+        tgt_scores = eval_tgt_gather_ref(
+            x, y, targets, chunk=chunk, id_offset=id_offset
+        )
+    pad = (-c) % chunk
+    yp = jnp.pad(y, ((0, pad), (0, 0)))
+    n_chunks = (c + pad) // chunk
+    f32 = jnp.float32
+    x32 = x.astype(f32)
+    tgt = tgt_scores.astype(f32)[:, None]
+    tid = targets.astype(jnp.int32)[:, None]
+
+    vals0 = jnp.full((b, k), NEG_INF, f32)
+    ids0 = jnp.full((b, k), jnp.iinfo(jnp.int32).max, jnp.int32)
+    cnt0 = jnp.zeros((b,), jnp.int32)
+    carry0 = (vals0, ids0, cnt0, cnt0)
+    if with_lse:
+        carry0 += (jnp.full((b,), NEG_INF, f32), jnp.zeros((b,), f32))
+
+    def body(carry, jc):
+        if with_lse:
+            vals, ids, gt, eq, m, se = carry
+        else:
+            vals, ids, gt, eq = carry
+        rows = jax.lax.dynamic_slice_in_dim(yp, jc * chunk, chunk, 0)
+        logits = x32 @ rows.astype(f32).T  # (b, chunk) — THE matmul
+        idx = jc * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        col = jnp.broadcast_to((id_offset + idx)[None, :], logits.shape)
+        valid = jnp.logical_and(
+            jnp.broadcast_to((idx < c)[None, :], logits.shape),
+            jnp.logical_and(col >= c_lo, col < c_hi),
+        )
+        s = jnp.where(valid, logits, NEG_INF)
+        self_col = col == tid
+        gt = gt + jnp.sum(
+            jnp.logical_and(s > tgt, ~self_col).astype(jnp.int32), axis=-1
+        )
+        eq = eq + jnp.sum(
+            jnp.logical_or(
+                s == tgt, jnp.logical_and(self_col, valid)
+            ).astype(jnp.int32),
+            axis=-1,
+        )
+        cat_v = jnp.concatenate([vals, s], axis=-1)
+        cat_i = jnp.concatenate([ids, col], axis=-1)
+        v, sel = jax.lax.top_k(cat_v, k)
+        i = jnp.take_along_axis(cat_i, sel, axis=-1)
+        if not with_lse:
+            return (v, i, gt, eq), None
+        cap = logit_softcap
+        lv = jnp.where(
+            valid,
+            logits if cap is None else cap * jnp.tanh(logits / cap),
+            NEG_INF,
+        )
+        m_new = jnp.maximum(m, jnp.max(lv, axis=-1))
+        se = se * jnp.exp(m - m_new) + jnp.sum(
+            jnp.where(valid, jnp.exp(lv - m_new[:, None]), 0.0), axis=-1
+        )
+        return (v, i, gt, eq, m_new, se), None
+
+    carry, _ = jax.lax.scan(body, carry0, jnp.arange(n_chunks))
+    if with_lse:
+        vals, ids, gt, eq, m, se = carry
+        return vals, ids, gt, eq, tgt_scores, m, se
+    vals, ids, gt, eq = carry
+    return vals, ids, gt, eq, tgt_scores, None, None
+
+
 def fused_lse_ref(x: jax.Array, y: jax.Array) -> jax.Array:
     """Full-catalog logsumexp per position. x: (N, d), y: (C, d) → (N,)."""
     logits = x.astype(jnp.float32) @ y.astype(jnp.float32).T

@@ -1,8 +1,9 @@
-"""Schema smoke tests for the CI benchmark artifacts (ISSUE 4
-satellite): run the two ``--json`` bench CLIs at smoke scale and assert
+"""Schema smoke tests for the CI benchmark artifacts (ISSUE 4/5
+satellites): run the ``--json`` bench CLIs at smoke scale and assert
 the required keys/types of ``BENCH_metric_memory.json`` /
-``BENCH_sce_pipeline.json`` — so benchmark refactors can't silently
-break the perf-trajectory tracking the CI artifacts accumulate."""
+``BENCH_sce_pipeline.json`` / ``BENCH_eval_pipeline.json`` — so
+benchmark refactors can't silently break the perf-trajectory tracking
+the CI artifacts accumulate."""
 import json
 import numbers
 import os
@@ -98,3 +99,51 @@ def test_sce_pipeline_json_schema(tmp_path):
         rows["total"]["fused_peak_elems"]
         < rows["total"]["dense_peak_elems"]
     )
+
+
+def test_eval_pipeline_json_schema(tmp_path):
+    """BENCH_eval_pipeline.json: the two-pass vs fused eval scorer rows
+    — both protocols and both paths present with timed stages; the
+    ``total`` rows carry the analytic catalog-matmul FLOP / HBM /
+    peak-element columns; the fused/two-pass FLOP ratio meets the
+    ISSUE 5 acceptance (≤ 0.55 seqrec, ≤ 0.40 LM) and fused peak
+    memory is no worse than the two-pass ``B·(block+2K+2)`` model."""
+    doc = _run_bench(
+        tmp_path, "benchmarks.kernel_bench",
+        "--mode", "eval-pipeline",
+        "--catalog", "1024", "--positions", "128", "--block-c", "64",
+    )
+    assert set(doc) == {"mode", "rows", "derived"}
+    assert doc["mode"] == "eval-pipeline"
+    assert isinstance(doc["derived"], str)
+    rows = {
+        (r["protocol"], r["path"], r["stage"]): r for r in doc["rows"]
+    }
+    assert set(rows) == {
+        ("seqrec", "two-pass", "tgt"), ("seqrec", "two-pass", "rank"),
+        ("seqrec", "two-pass", "total"),
+        ("seqrec", "fused", "tgt-gather"), ("seqrec", "fused", "sweep"),
+        ("seqrec", "fused", "total"),
+        ("lm", "two-pass", "tgt"), ("lm", "two-pass", "rank"),
+        ("lm", "two-pass", "nll"), ("lm", "two-pass", "total"),
+        ("lm", "fused", "tgt-gather"), ("lm", "fused", "sweep"),
+        ("lm", "fused", "total"),
+    }
+    for key_, row in rows.items():
+        _assert_row(row, {"wall_us": numbers.Real}, f"eval_pipeline{key_}")
+        if key_[2] == "total":
+            _assert_row(row, {
+                "matmul_flops": numbers.Integral,
+                "hbm_bytes": numbers.Integral,
+                "peak_elems": numbers.Integral,
+            }, f"eval_pipeline{key_}")
+    for protocol, bound in (("seqrec", 0.55), ("lm", 0.40)):
+        fused = rows[(protocol, "fused", "total")]
+        twopass = rows[(protocol, "two-pass", "total")]
+        ratio = fused["flop_ratio_vs_twopass"]
+        assert ratio == pytest.approx(
+            fused["matmul_flops"] / twopass["matmul_flops"]
+        )
+        assert ratio <= bound, (protocol, ratio)
+        assert fused["hbm_bytes"] < twopass["hbm_bytes"], protocol
+        assert fused["peak_elems"] <= twopass["peak_elems"], protocol

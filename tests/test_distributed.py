@@ -318,12 +318,17 @@ def test_streaming_eval_sharded_matches_oracle():
 
 
 def test_streaming_lm_eval_sharded_matches_single_device():
-    """ISSUE 4 acceptance: the LM token-rank protocol on dp×tp = 2×4
+    """ISSUE 4/5 acceptance: the LM token-rank protocol on dp×tp = 2×4
     AND 4×2 meshes — vocab table sharded over ``model`` (the same
     vocab-parallel layout the SCE loss uses, phantom padded rows
     masked by ``c_hi``), the ``B·T`` position rows over ``data`` —
     must equal the single-device streaming result exactly (which
-    test_lm_eval.py pins against the dense (B·T, V) oracle)."""
+    test_lm_eval.py pins against the dense (B·T, V) oracle) on every
+    rank metric. The next-token ``loss`` now also comes from the
+    sharded fused sweep (per-shard online-LSE carries merged via the
+    shifted-sum psum/pmax combine — the replicated ``ce_chunked``
+    V-sweep is gone), so it matches the single-device fold to f32
+    rounding rather than bit-for-bit."""
     _run("""
     from repro.data import Cursor, SeqDataConfig, SequenceDataset
     from repro.eval import evaluate_streaming_lm
@@ -345,8 +350,74 @@ def test_streaming_lm_eval_sharded_matches_single_device():
     for mesh in (mesh24, mesh42):
         got = evaluate_streaming_lm(params, cfg, eb, mesh=mesh,
                                     block_c=24)
-        assert got == want, (dict(mesh.shape), got, want)
+        for key_ in want:
+            tol = 1e-6 if key_ == "loss" else 0.0
+            assert abs(got[key_] - want[key_]) <= tol, (
+                dict(mesh.shape), key_, got, want)
     print("sharded lm eval ok")
+    """)
+
+
+def test_fused_eval_sharded_scorer_with_lse_merge():
+    """ISSUE 5 scorer-level acceptance: the fused sharded dataflow —
+    psum'd ``eval_tgt_gather`` pre-stage, ONE per-shard fused sweep,
+    psum'd rank counts, ``distributed_topk_from_local`` candidate
+    merge, ``distributed_lse_from_local`` shifted-sum LSE merge — on a
+    tie-heavy integer case with C_local % block != 0 tails: ranks, ids
+    and target scores equal the dense single-device oracle EXACTLY;
+    the merged logsumexp matches dense to f32 rounding."""
+    _run("""
+    from repro.core import metrics as core_metrics
+    from repro.dist.collectives import (
+        distributed_lse_from_local, distributed_topk_from_local)
+    from repro.dist.sharding import batch_spec, catalog_spec
+    from repro.eval import ranks_from_counts
+    from repro.kernels import ops
+    b, c, d, k = 16, 96, 8, 10
+    ks_ = jax.random.split(jax.random.PRNGKey(7), 3)
+    x = jax.random.randint(ks_[0], (b, d), -3, 4).astype(jnp.float32)
+    y = jax.random.randint(ks_[1], (c, d), -2, 3).astype(jnp.float32)
+    y = y.at[c // 2:].set(y[: c - c // 2])  # exact duplicate rows
+    t = jax.random.randint(ks_[2], (b,), 1, c)
+
+    def inner(x_l, y_l, t_l):
+        c_local = y_l.shape[0]
+        off = jax.lax.axis_index("model") * c_local
+        tgt = jax.lax.psum(
+            ops.eval_tgt_gather(x_l, y_l, t_l, block_c=20, id_offset=off),
+            "model")
+        vals_l, ids_l, gt_l, eq_l, _t, m_l, s_l = ops.eval_fused(
+            x_l, y_l, t_l, k, tgt_scores=tgt, block_c=20,
+            c_lo=1, c_hi=c, id_offset=off, with_lse=True)
+        gt = jax.lax.psum(gt_l, "model")
+        eq = jax.lax.psum(eq_l, "model")
+        vals, gids = distributed_topk_from_local(vals_l, ids_l, k, "model")
+        lse = distributed_lse_from_local(m_l, s_l, "model")
+        return vals, gids, gt, eq, tgt, lse
+
+    fn = shard_map(inner, mesh=mesh42,
+                   in_specs=(batch_spec(mesh42, 2), catalog_spec(mesh42),
+                             batch_spec(mesh42, 1)),
+                   out_specs=(batch_spec(mesh42, 2), batch_spec(mesh42, 2))
+                   + (batch_spec(mesh42, 1),) * 4)
+    with set_mesh(mesh42):
+        vals, gids, gt, eq, tgt, lse = jax.jit(fn)(x, y, t)
+    scores = np.array(x @ y.T)
+    want_tgt = scores[np.arange(b), np.asarray(t)]
+    scores[:, 0] = -1e30
+    dv, di = jax.lax.top_k(jnp.asarray(scores), k)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(dv))
+    np.testing.assert_array_equal(np.asarray(gids), np.asarray(di))
+    want_ranks = np.asarray(core_metrics.rank_of_target(
+        jnp.asarray(scores), t))
+    np.testing.assert_array_equal(ranks_from_counts(gt, eq), want_ranks)
+    assert (np.asarray(eq) > 1).any()  # ties actually present
+    # integer-exact embeddings: the gather matmul target is exact too
+    np.testing.assert_array_equal(np.asarray(tgt), want_tgt)
+    want_lse = np.asarray(jax.nn.logsumexp(jnp.asarray(scores), axis=-1))
+    np.testing.assert_allclose(np.asarray(lse), want_lse,
+                               rtol=1e-6, atol=1e-6)
+    print("fused sharded scorer ok")
     """)
 
 

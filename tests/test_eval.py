@@ -2,7 +2,9 @@
 pure-jnp reference vs the dense ``core.metrics`` oracle — exact (not
 allclose) on ranks, ids and metrics, including tie-heavy and
 non-divisible padded-tail cases (ISSUE 2 acceptance grid). The dp×tp
-mesh variants live in tests/test_distributed.py."""
+mesh variants live in tests/test_distributed.py. The two-pass scorer exercised here is
+the deprecated differential oracle (PR 5) — its DeprecationWarning is
+expected and silenced for the whole module."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,6 +20,8 @@ from repro.eval import (
     streaming_rank_topk,
 )
 from repro.kernels import ops, ref
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 # (B, C, d, k, block_b, block_c) — includes C % block_c != 0 tails and
 # a block_b that doesn't divide B

@@ -290,6 +290,87 @@ def test_mips_topk_kernel_selection_sized_k():
     _assert_topk_matches(ref_v, ref_i, want_v, want_i, None, k)
 
 
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.integers(1, 64),
+    n_tiles=st.integers(1, 5),
+    tile=st.integers(1, 48),
+    tie_level=st.integers(0, 1),
+)
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_merge_bitonic_equals_rounds_property(
+    seed, k, n_tiles, tile, tie_level
+):
+    """ISSUE 5 satellite: the bitonic partial-sort merge prototype must
+    be output-identical to the K-round merge — values, ids, tie order,
+    ID_PAD exhausted slots — across randomized buffer/tile widths
+    (incl. non-power-of-two), tie densities and NEG_INF holes, folding
+    tile-by-tile exactly like the kernels do."""
+    from repro.kernels.topk_merge import merge_topk_tile_bitonic
+
+    rng = np.random.default_rng(seed)
+    rows, width = 4, n_tiles * tile
+    if tie_level:
+        scores = rng.integers(-3, 4, size=(rows, width)).astype(np.float32)
+    else:
+        scores = rng.normal(size=(rows, width)).astype(np.float32)
+    scores[rng.random((rows, width)) < 0.2] = NEG_INF
+
+    v_r = v_b = jnp.full((rows, k), NEG_INF, jnp.float32)
+    i_r = i_b = jnp.full((rows, k), ID_PAD, jnp.int32)
+    for t in range(n_tiles):
+        tv = jnp.asarray(scores[:, t * tile:(t + 1) * tile])
+        ti = jnp.broadcast_to(
+            t * tile + jnp.arange(tile, dtype=jnp.int32)[None, :],
+            tv.shape,
+        )
+        v_r, i_r = merge_topk_tile(v_r, i_r, tv, ti, k)
+        v_b, i_b = merge_topk_tile_bitonic(v_b, i_b, tv, ti, k)
+        np.testing.assert_array_equal(np.asarray(v_b), np.asarray(v_r))
+        np.testing.assert_array_equal(np.asarray(i_b), np.asarray(i_r))
+
+
+def test_mips_topk_bitonic_flag_matches_rounds(key):
+    """The ``merge_impl="bitonic"`` gate on the kernel: identical
+    outputs to the default K-round merge (and the dense oracle) on a
+    tie-heavy C % block != 0 case — no default flip, the flag is
+    opt-in."""
+    from repro.kernels import mips_topk as mk
+
+    kq, ky = jax.random.split(key)
+    q = jax.random.randint(kq, (9, 8), -3, 4).astype(jnp.float32)
+    y = jax.random.randint(ky, (90, 8), -2, 3).astype(jnp.float32)
+    y = y.at[45:].set(y[:45])
+    want_v, want_i = _dense_masked_topk(q, y, None, 20)
+    got_v, got_i = mk.mips_topk(
+        q, y, 20, block_c=28, merge_impl="bitonic", interpret=True
+    )
+    _assert_topk_matches(got_v, got_i, want_v, want_i, None, 20)
+    import inspect
+
+    # the gate must not flip by default
+    assert inspect.signature(ops.mips_topk).parameters[
+        "merge_impl"
+    ].default == "rounds"
+
+
+@pytest.mark.slow
+def test_mips_topk_bitonic_selection_sized_k():
+    """The regime the prototype exists for — selection-sized
+    K = b_y = 256 (the K-round merge's named scaling concern,
+    KERNELS.md §mips_topk): bitonic and rounds kernels must agree
+    exactly with the dense oracle at production bucket size."""
+    from repro.kernels import mips_topk as mk
+
+    k, c, d, block_c = 256, 600, 8, 128
+    q, y, _ = _property_problem(7, c, d, tie_level=1, starve=0)
+    want_v, want_i = _dense_masked_topk(q, y, None, k)
+    got_v, got_i = mk.mips_topk(
+        q, y, k, block_c=block_c, merge_impl="bitonic", interpret=True
+    )
+    _assert_topk_matches(got_v, got_i, want_v, want_i, None, k)
+
+
 def test_mips_topk_exhausted_rows_use_placeholder(key):
     """Fewer valid columns than k: the trailing slots carry NEG_INF
     values and the INT32_MAX placeholder id, like the reference."""

@@ -38,6 +38,27 @@ the times are a correctness-path check, not TPU numbers. ``--json``
 dumps the rows (CI emits ``BENCH_sce_pipeline.json`` at small shape so
 the perf trajectory accumulates as build artifacts).
 
+``--mode lm-loss``: one TRAINING step (loss + dX + dW) of the LM-head
+loss, three ways, at the gemma-2 vocab scale:
+
+  * ``ce`` — naive full CE: dense ``(N, V)`` logits, autodiff backward
+    (materializes them again);
+  * ``ce_fused_linear`` — the fully fused linear path
+    (kernels/linear_sce.py), timed via its jitted streaming CPU analog
+    (one (m, s, pos) forward sweep + one manual backward sweep, peak
+    loss-side state = one ``(N, chunk)`` tile);
+  * ``sce`` — the paper's loss, timed on the pure-jnp production CPU
+    path; its peak-element column models the kernel path (same
+    convention as ``--mode eval-pipeline``).
+
+Each row reports wall time, tokens/sec, the analytic peak loss-side
+elements from ``core.losses.loss_peak_elements``, and both as ratios
+vs naive CE (``tokens_per_s_vs_naive``, ``peak_elems_vs_naive`` — the
+machine-independent numbers the trajectory check tracks). A gradcheck
+block verifies the actual Pallas kernel (interpret mode, small shape)
+against the dense oracle, softcap on and off. ``--json`` dumps
+``BENCH_lm_loss.json`` (CI runs this at smoke scale).
+
 On TPU, the fused paths' win is structural: the (n_b, C) selection
 scores, (n_b, b_x, b_y) logit tensor and (n_b, b_y, d) gather never
 round-trip HBM.
@@ -52,7 +73,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.sce import SCEConfig, sce_peak_elements
+from repro.core.sce import NEG_INF, SCEConfig, sce_peak_elements
 from repro.kernels import ops, ref
 
 
@@ -301,6 +322,186 @@ def run_eval_pipeline(b=256, c=4096, d=32, k=10, block_c=256):
     return rows, derived
 
 
+def _linear_ce_value_and_grad(x, y, targets, *, chunk=512,
+                              logit_softcap=None):
+    """Jitted CPU analog of kernels/linear_sce.py: one streaming
+    ``(m, s, pos)`` forward sweep + one manual streaming backward sweep
+    that accumulates dX and emits dW tile-by-tile — peak loss-side
+    state is one ``(N, chunk)`` logit tile, V-independent, exactly the
+    kernel's working set. Numerically identical to dense CE."""
+    f32 = jnp.float32
+    n, d = x.shape
+    c = y.shape[0]
+    n_chunks = -(-c // chunk)
+    pad = n_chunks * chunk - c
+    y_tiles = jnp.pad(y, ((0, pad), (0, 0))).reshape(n_chunks, chunk, d)
+    ids = jnp.arange(n_chunks * chunk).reshape(n_chunks, chunk)
+
+    def cap(logits):
+        if logit_softcap is None:
+            return logits
+        return logit_softcap * jnp.tanh(logits / logit_softcap)
+
+    def fwd(carry, inp):
+        m, s, pos = carry
+        y_c, id_c = inp
+        logits = cap(jnp.dot(x, y_c.T, preferred_element_type=f32))
+        logits = jnp.where((id_c < c)[None, :], logits, NEG_INF)
+        pos = pos + jnp.sum(
+            jnp.where(id_c[None, :] == targets[:, None], logits, 0.0),
+            axis=-1,
+        )
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        s = s * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[:, None]), axis=-1
+        )
+        return (m_new, s, pos), None
+
+    init = (
+        jnp.full((n,), NEG_INF, f32),
+        jnp.zeros((n,), f32),
+        jnp.zeros((n,), f32),
+    )
+    (m, s, pos), _ = jax.lax.scan(fwd, init, (y_tiles, ids))
+    lse = m + jnp.log(s)
+    loss = jnp.mean(lse - pos)
+    g = 1.0 / n  # d(mean)/d(per_pos)
+
+    def bwd(dx, inp):
+        y_c, id_c = inp
+        capped = cap(jnp.dot(x, y_c.T, preferred_element_type=f32))
+        valid = (id_c < c)[None, :]
+        p = jnp.where(valid, jnp.exp(capped - lse[:, None]), 0.0)
+        onehot = (id_c[None, :] == targets[:, None]).astype(f32)
+        if logit_softcap is None:
+            deriv = 1.0
+        else:
+            deriv = 1.0 - (capped / logit_softcap) ** 2
+        gl = (p - onehot) * deriv * g
+        dx = dx + jnp.dot(gl, y_c, preferred_element_type=f32)
+        dw_c = jnp.dot(gl.T, x, preferred_element_type=f32)
+        return dx, dw_c
+
+    dx, dw_tiles = jax.lax.scan(bwd, jnp.zeros((n, d), f32), (y_tiles, ids))
+    dw = dw_tiles.reshape(n_chunks * chunk, d)[:c]
+    return loss, (dx.astype(x.dtype), dw.astype(y.dtype))
+
+
+def _lm_loss_gradcheck(logit_softcap, n=96, c=700, d=12):
+    """The ACTUAL Pallas linear kernel (interpret mode, small shape) vs
+    the dense oracle: loss, dX, dW. Returns errors + pass flag at the
+    documented tolerances (loss rtol 1e-5; grads rtol 1e-4, atol 1e-6)."""
+    import numpy as np
+
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    scale = 4.0 if logit_softcap is not None else 1.0
+    x = jax.random.normal(ks[0], (n, d)) * scale
+    y = jax.random.normal(ks[1], (c, d)) * scale
+    t = jax.random.randint(ks[2], (n,), 0, c)
+
+    def dense(x, y):
+        logits = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+        if logit_softcap is not None:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        pos = jnp.take_along_axis(logits, t[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - pos)
+
+    def fused(x, y):
+        per_pos = ops.linear_ce_loss(
+            x, y, t, logit_softcap=logit_softcap,
+            block_n=32, block_c=128, interpret=True,
+        )
+        return jnp.mean(per_pos)
+
+    l0, (dx0, dy0) = jax.value_and_grad(dense, argnums=(0, 1))(x, y)
+    l1, (dx1, dy1) = jax.value_and_grad(fused, argnums=(0, 1))(x, y)
+    loss_rel = float(abs(l1 - l0) / abs(l0))
+    dx_err = float(jnp.max(jnp.abs(dx1 - dx0)))
+    dw_err = float(jnp.max(jnp.abs(dy1 - dy0)))
+    ok = (
+        loss_rel < 1e-5
+        and np.allclose(dx1, dx0, rtol=1e-4, atol=1e-6)
+        and np.allclose(dy1, dy0, rtol=1e-4, atol=1e-6)
+    )
+    return {
+        "logit_softcap": logit_softcap,
+        "loss_rel_err": loss_rel,
+        "dx_max_abs_err": dx_err,
+        "dw_max_abs_err": dw_err,
+        "passes_tolerances": bool(ok),
+    }
+
+
+def run_lm_loss(n=1024, c=262144, d=64, chunk=512):
+    """One training step (loss + dX + dW) of the LM-head loss, three
+    ways (module docstring). ``n`` is the flattened B·T row count."""
+    from repro.core import losses as L
+    from repro.core.sce import sce_loss
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (n, d), jnp.float32)
+    y = jax.random.normal(ks[1], (c, d), jnp.float32)
+    t = jax.random.randint(ks[2], (n,), 0, c)
+
+    f_naive = jax.jit(jax.value_and_grad(
+        lambda x, y: L.ce(x, y, t)[0], argnums=(0, 1)))
+    f_linear = jax.jit(functools.partial(
+        _linear_ce_value_and_grad, targets=t, chunk=chunk))
+    # SCE: timed on the pure-jnp production CPU path; the kernel-path
+    # config (use_kernel=True) feeds the analytic element column.
+    jcfg = SCEConfig.from_alpha_beta(n, c, use_kernel=False)
+    kcfg = SCEConfig.from_alpha_beta(n, c, use_kernel=True)
+    f_sce = jax.jit(jax.value_and_grad(
+        lambda x, y: sce_loss(x, y, t, key=ks[3], cfg=jcfg), argnums=(0, 1)))
+
+    reps = 1 if n * c > 5e7 else 3
+    naive_us = _timeit(f_naive, x, y, reps=reps)
+    linear_us = _timeit(f_linear, x, y, reps=reps)
+    sce_us = _timeit(f_sce, x, y, reps=reps)
+
+    elems = {
+        "ce": L.loss_peak_elements("ce", n, c, d),
+        "ce_fused_linear": L.loss_peak_elements("ce_fused_linear", n, c, d),
+        "sce": L.loss_peak_elements("sce", n, c, d, cfg=kcfg),
+    }
+
+    def row(name, us):
+        tps = n / (us * 1e-6)
+        return {
+            "loss": name,
+            "tokens": n,
+            "vocab": c,
+            "d": d,
+            "wall_us": us,
+            "tokens_per_s": tps,
+            "peak_loss_elems": elems[name],
+            "tokens_per_s_vs_naive": tps / (n / (naive_us * 1e-6)),
+            "peak_elems_vs_naive": elems[name] / elems["ce"],
+        }
+
+    rows = [
+        row("ce", naive_us),
+        row("ce_fused_linear", linear_us),
+        row("sce", sce_us),
+    ]
+    gradcheck = [_lm_loss_gradcheck(None), _lm_loss_gradcheck(30.0)]
+    r_tps = rows[2]["tokens_per_s_vs_naive"]
+    r_el = rows[2]["peak_elems_vs_naive"]
+    derived = (
+        f"sce = {r_tps:.1f}x tokens/s and {r_el:.4f}x peak loss-side "
+        f"elements vs naive ce at V={c} (targets: >=2x, <=0.1x); "
+        f"ce_fused_linear matches naive CE exactly with "
+        f"{rows[1]['peak_elems_vs_naive']:.4f}x (V-independent) "
+        f"loss-side state. Times are jitted streaming CPU analogs, "
+        f"not TPU; the gradcheck block runs the real Pallas kernel "
+        f"in interpret mode"
+    )
+    return rows, derived, gradcheck
+
+
 def run():
     return run_bucket()
 
@@ -308,7 +509,8 @@ def run():
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode",
-                    choices=("bucket", "sce-pipeline", "eval-pipeline"),
+                    choices=("bucket", "sce-pipeline", "eval-pipeline",
+                             "lm-loss"),
                     default="bucket")
     ap.add_argument("--json", help="write rows + derived summary to PATH")
     ap.add_argument("--catalog", type=int, default=2048,
@@ -317,8 +519,27 @@ def main():
                     help="sce-pipeline position / eval-pipeline row count")
     ap.add_argument("--block-c", type=int, default=256,
                     help="eval-pipeline streaming tile width")
+    ap.add_argument("--d", type=int, default=64,
+                    help="lm-loss model width")
     args = ap.parse_args()
-    if args.mode == "eval-pipeline":
+    gradcheck = None
+    if args.mode == "lm-loss":
+        rows, derived, gradcheck = run_lm_loss(
+            n=args.positions, c=args.catalog, d=args.d,
+        )
+        print("loss,wall_us,tokens_per_s,peak_loss_elems,"
+              "tokens_per_s_vs_naive,peak_elems_vs_naive")
+        for r in rows:
+            print(f"{r['loss']},{r['wall_us']:.0f},"
+                  f"{r['tokens_per_s']:.0f},{r['peak_loss_elems']},"
+                  f"{r['tokens_per_s_vs_naive']:.2f},"
+                  f"{r['peak_elems_vs_naive']:.4f}")
+        for gc in gradcheck:
+            print(f"gradcheck cap={gc['logit_softcap']}: "
+                  f"pass={gc['passes_tolerances']} "
+                  f"dx_err={gc['dx_max_abs_err']:.2e} "
+                  f"dw_err={gc['dw_max_abs_err']:.2e}")
+    elif args.mode == "eval-pipeline":
         rows, derived = run_eval_pipeline(
             b=args.positions, c=args.catalog, block_c=args.block_c
         )
@@ -345,9 +566,11 @@ def main():
                   f"{r['fused_interp_us']:.0f},{r['hbm_saved_mib']:.1f}")
     print(derived)
     if args.json:
+        payload = {"mode": args.mode, "rows": rows, "derived": derived}
+        if gradcheck is not None:
+            payload["gradcheck"] = gradcheck
         with open(args.json, "w") as f:
-            json.dump({"mode": args.mode, "rows": rows, "derived": derived},
-                      f, indent=2)
+            json.dump(payload, f, indent=2)
         print(f"wrote {args.json}")
 
 

@@ -14,6 +14,14 @@ candidate gather + its VJP cotangent. Rows come in pairs — ``sce``
 (materializing jnp path) and ``sce-fused`` (streaming
 ``mips_topk`` + scalar-prefetch gather kernels) — so the before/after
 of the fusion is explicit.
+
+``analytic_lm_breakdown`` adds the LM-family rows at the gemma-2 scale
+(V=256k, d=2304; DESIGN.md §3's LM memory table): naive full CE vs the
+fully fused linear CE (kernels/linear_sce.py — loss-side state is
+V-independent, forward and backward) vs kernel-path SCE. For the LM
+rows the params / optimizer columns count the LM-head (tied output
+embedding) table only — the parameter the loss stage actually touches —
+and the activations column is the flattened ``(B·T, d)`` hidden states.
 """
 from __future__ import annotations
 
@@ -47,6 +55,7 @@ def analytic_breakdown(n_items: int, batch: int = 128, seq: int = 200,
         )),
     ]:
         rows.append({
+            "family": "seqrec",
             "loss": loss,
             "catalog": n_items,
             "logits_mib": logit_b / MiB,
@@ -54,6 +63,41 @@ def analytic_breakdown(n_items: int, batch: int = 128, seq: int = 200,
             "optimizer_mib": opt_b / MiB,
             "activations_mib": acts_b / MiB,
             "total_mib": (logit_b + params_b + opt_b + acts_b) / MiB,
+        })
+    return rows
+
+
+def analytic_lm_breakdown(vocab: int = 262144, batch: int = 8,
+                          seq: int = 512, d: int = 2304):
+    """LM-family rows at the gemma-2 256k-vocab scale (module
+    docstring): one training step's loss-side peak, from the same
+    ``core.losses.loss_peak_elements`` model the tests pin."""
+    from repro.core.losses import loss_peak_elements
+
+    n_pos = batch * seq
+    head_b = vocab * d * 4
+    opt_b = 2 * head_b  # AdamW m+v for the head table
+    hidden_b = n_pos * d * 4
+    kcfg = SCEConfig.from_alpha_beta(
+        n_pos, vocab, bucket_size_y=256, use_kernel=True
+    )
+    rows = []
+    for loss, elems in [
+        ("ce", loss_peak_elements("ce", n_pos, vocab, d)),
+        ("ce_fused_linear",
+         loss_peak_elements("ce_fused_linear", n_pos, vocab, d)),
+        ("sce-fused", loss_peak_elements("sce", n_pos, vocab, d, cfg=kcfg)),
+    ]:
+        logit_b = elems * 4
+        rows.append({
+            "family": "lm",
+            "loss": loss,
+            "catalog": vocab,
+            "logits_mib": logit_b / MiB,
+            "params_mib": head_b / MiB,
+            "optimizer_mib": opt_b / MiB,
+            "activations_mib": hidden_b / MiB,
+            "total_mib": (logit_b + head_b + opt_b + hidden_b) / MiB,
         })
     return rows
 
@@ -91,21 +135,27 @@ def run():
     rows = []
     for c in (20_000, 100_000):
         rows.extend(analytic_breakdown(c))
+    rows.extend(analytic_lm_breakdown())
     measured = measured_loss_bytes(50_000)
+    lm = {r["loss"]: r for r in rows if r["family"] == "lm"}
     derived = (
         f"measured_temp ce={measured['ce']:.0f}MiB "
         f"sce={measured['sce']:.0f}MiB "
-        f"ratio={measured['ce']/max(measured['sce'],1e-9):.1f}x"
+        f"ratio={measured['ce']/max(measured['sce'],1e-9):.1f}x; "
+        f"lm@256k loss-side ce={lm['ce']['logits_mib']:.0f}MiB "
+        f"fused-linear={lm['ce_fused_linear']['logits_mib']:.1f}MiB "
+        f"sce={lm['sce-fused']['logits_mib']:.1f}MiB"
     )
     return rows, derived
 
 
 def main():
     rows, derived = run()
-    print("loss,catalog,logits_mib,params_mib,optimizer_mib,"
+    print("family,loss,catalog,logits_mib,params_mib,optimizer_mib,"
           "activations_mib,total_mib")
     for r in rows:
-        print(f"{r['loss']},{r['catalog']},{r['logits_mib']:.1f},"
+        print(f"{r['family']},{r['loss']},{r['catalog']},"
+              f"{r['logits_mib']:.1f},"
               f"{r['params_mib']:.1f},{r['optimizer_mib']:.1f},"
               f"{r['activations_mib']:.1f},{r['total_mib']:.1f}")
     print(derived)

@@ -1,0 +1,177 @@
+"""Benchmark trajectory check: current BENCH_*.json vs committed baselines.
+
+CI emits ``BENCH_*.json`` artifacts every run (smoke-scale — small
+shapes, CPU), but artifacts alone don't FAIL anything: a schema change
+or a structural regression only shows up when a human diffs two runs.
+This module turns the committed snapshot under ``benchmarks/baselines/``
+into a gate:
+
+  * **schema drift** — a current file whose top-level keys, ``mode``,
+    or per-row key sets differ from its baseline fails (downstream
+    consumers of the artifacts — the schema tests, plot scripts — key
+    on those names);
+  * **metric regression** — machine-independent RATIO metrics
+    (``tokens_per_s_vs_naive``, ``peak_elems_vs_naive``,
+    ``flop_ratio_vs_twopass``, the fused/dense peak-element quotient)
+    fail if they move in the BAD direction by more than 25%. Raw wall
+    times are machine-dependent and are deliberately NOT compared —
+    a slower CI runner must not fail the build, a fusion that stops
+    fusing must.
+
+Usage::
+
+    python -m benchmarks.trajectory --current . \
+        --baselines benchmarks/baselines          # check (CI)
+    python -m benchmarks.trajectory --current . \
+        --baselines benchmarks/baselines --update # snapshot new baselines
+
+A current file with no committed baseline is reported but does not
+fail (the first CI run after adding a bench mode passes; commit the
+snapshot via ``--update`` to start gating it). A MISSING current file
+that has a baseline fails — a bench silently dropping out of CI is
+exactly the kind of drift this exists to catch.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+
+THRESHOLD = 0.25  # relative bad-direction movement that fails
+
+# metric name -> True if higher is better
+_RATIO_METRICS = {
+    "tokens_per_s_vs_naive": True,
+    "peak_elems_vs_naive": False,
+    "flop_ratio_vs_twopass": False,
+}
+
+
+def _row_label(row, i):
+    if "protocol" in row:
+        return f"{row['protocol']}/{row.get('path', '')}/{row.get('stage', '')}"
+    for k in ("loss", "stage", "shape", "metric"):
+        if k in row:
+            return str(row[k])
+    return str(i)
+
+
+def extract_metrics(payload):
+    """``label.metric -> (value, higher_is_better)`` for every
+    machine-independent ratio metric present in the rows."""
+    out = {}
+    for i, row in enumerate(payload.get("rows", [])):
+        if not isinstance(row, dict):
+            continue
+        label = _row_label(row, i)
+        for name, hib in _RATIO_METRICS.items():
+            if row.get(name) is not None:
+                out[f"{label}.{name}"] = (float(row[name]), hib)
+        dense = row.get("dense_peak_elems")
+        fused = row.get("fused_peak_elems")
+        if dense and fused is not None:
+            out[f"{label}.fused_over_dense_peak"] = (fused / dense, False)
+    return out
+
+
+def schema_of(payload):
+    """The shape the schema-drift check pins: top-level keys, ``mode``,
+    and the sorted set of per-row key tuples."""
+    rows = payload.get("rows", [])
+    return {
+        "top_keys": sorted(payload.keys()),
+        "mode": payload.get("mode"),
+        "row_keys": sorted(
+            {tuple(sorted(r.keys())) for r in rows if isinstance(r, dict)}
+        ),
+    }
+
+
+def compare(current: dict, baseline: dict, name: str):
+    """Failure strings for one BENCH file pair (empty = pass)."""
+    fails = []
+    cs, bs = schema_of(current), schema_of(baseline)
+    if cs != bs:
+        fails.append(
+            f"{name}: schema drift — baseline {bs} vs current {cs}"
+        )
+        return fails  # metric names are meaningless once the schema moved
+    cur_m, base_m = extract_metrics(current), extract_metrics(baseline)
+    for key, (bval, hib) in base_m.items():
+        if key not in cur_m:
+            fails.append(f"{name}: metric {key} disappeared")
+            continue
+        cval, _ = cur_m[key]
+        if bval == 0:
+            continue
+        change = (cval - bval) / abs(bval)
+        bad = -change if hib else change
+        if bad > THRESHOLD:
+            direction = "dropped" if hib else "grew"
+            fails.append(
+                f"{name}: {key} {direction} {bad:.0%} "
+                f"(baseline {bval:.4f} -> current {cval:.4f}, "
+                f"threshold {THRESHOLD:.0%})"
+            )
+    return fails
+
+
+def run_check(current_dir, baselines_dir, update=False):
+    current_dir = pathlib.Path(current_dir)
+    baselines_dir = pathlib.Path(baselines_dir)
+    cur_files = sorted(current_dir.glob("BENCH_*.json"))
+    base_files = sorted(baselines_dir.glob("BENCH_*.json"))
+
+    if update:
+        baselines_dir.mkdir(parents=True, exist_ok=True)
+        for f in cur_files:
+            shutil.copy(f, baselines_dir / f.name)
+            print(f"snapshot {f.name} -> {baselines_dir}/")
+        return 0
+
+    fails, notes = [], []
+    cur_names = {f.name for f in cur_files}
+    for bf in base_files:
+        if bf.name not in cur_names:
+            fails.append(f"{bf.name}: baseline exists but current run "
+                         f"produced no such file (bench dropped from CI?)")
+    for cf in cur_files:
+        bf = baselines_dir / cf.name
+        if not bf.exists():
+            notes.append(f"{cf.name}: no baseline yet (run --update to gate)")
+            continue
+        with open(cf) as fh:
+            current = json.load(fh)
+        with open(bf) as fh:
+            baseline = json.load(fh)
+        file_fails = compare(current, baseline, cf.name)
+        if file_fails:
+            fails.extend(file_fails)
+        else:
+            n = len(extract_metrics(baseline))
+            print(f"{cf.name}: OK ({n} gated metrics, schema stable)")
+    for n in notes:
+        print(f"note: {n}")
+    if fails:
+        for f in fails:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default=".",
+                    help="directory holding this run's BENCH_*.json")
+    ap.add_argument("--baselines", default="benchmarks/baselines",
+                    help="directory of committed baseline snapshots")
+    ap.add_argument("--update", action="store_true",
+                    help="snapshot current files as the new baselines")
+    args = ap.parse_args()
+    sys.exit(run_check(args.current, args.baselines, update=args.update))
+
+
+if __name__ == "__main__":
+    main()

@@ -69,6 +69,7 @@ ARCH = register(
         fsdp=False,  # 2.6B replicates fine; TP for the 256k-vocab head
         microbatches={"train_4k": 2},
         sce_bucket_size_y=1024,  # big catalog → larger buckets pay off
-        notes="final-logit softcap applied inside SCE via the jnp path",
+        notes="final-logit softcap applied inside the tile on both SCE "
+              "paths (kernel + jnp); full-CE baseline via ce_fused_linear",
     )
 )

@@ -145,7 +145,7 @@ def _sce_inner(
 
     n_b = cfg.n_buckets
     b_x = min(cfg.bucket_size_x, n_local)
-    use_kernel = cfg.use_kernel and cfg.logit_softcap is None
+    use_kernel = cfg.use_kernel
 
     key_l = jax.random.fold_in(key, _data_shard_index(dp))
     b = make_bucket_centers(
@@ -204,7 +204,10 @@ def _sce_inner(
         if use_kernel:
             from repro.kernels import ops as _kops
 
-            return _kops.sce_gather_plse(x_b, y_l, idx_y_c, tgt_b, gidx_c)
+            return _kops.sce_gather_plse(
+                x_b, y_l, idx_y_c, tgt_b, gidx_c,
+                logit_softcap=cfg.logit_softcap,
+            )
         y_b = jnp.take(y_l, idx_y_c, axis=0)  # (nb_c, k_cand, d)
         neg = apply_softcap(
             jnp.einsum("nxd,nyd->nxy", x_b, y_b), cfg.logit_softcap

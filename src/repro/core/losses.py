@@ -13,7 +13,12 @@ Implemented:
   * ``ce_chunked``  — numerically identical CE with an online logsumexp
                       over vocab chunks (never materializes ``N×C``);
                       the TPU-honest baseline.
-  * ``ce_fused``    — CE via the Pallas fused kernel (kernels/fused_ce.py).
+  * ``ce_fused``    — CE via the Pallas fused kernel (kernels/fused_ce.py;
+                      forward-only fusion — autodiff backward is dense).
+  * ``ce_fused_linear`` — CE via the fully fused linear kernel
+                      (kernels/linear_sce.py): loss, dX and dW all
+                      stream over catalog tiles; the ``N×C`` logits
+                      never exist forward or backward. Softcap-aware.
   * ``bce``         — Binary CE with 1 uniform negative (paper eq. 2).
   * ``bce_plus``    — BCE with k uniform negatives (paper eq. 3, Caser-style).
   * ``gbce``        — gSASRec generalized BCE with calibration parameter t
@@ -120,6 +125,26 @@ def ce_fused(x, y, targets, valid_mask=None, key=None) -> Tuple[jax.Array, Aux]:
     from repro.kernels import ops as _kops
 
     per_pos = _kops.fused_ce_loss(x, y, targets)
+    return _mean_over_valid(per_pos, valid_mask), {}
+
+
+def ce_fused_linear(
+    x, y, targets, valid_mask=None, key=None, *,
+    logit_softcap: Optional[float] = None,
+    block_n: int = 256, block_c: int = 512,
+) -> Tuple[jax.Array, Aux]:
+    """Full CE through the fused LINEAR kernel (kernels/linear_sce.py):
+    loss, dX and dW all stream over catalog tiles — the ``(N, C)`` logit
+    tensor never exists in HBM, forward OR backward (``ce_fused`` fuses
+    the forward only; its autodiff backward rematerializes dense
+    logits). ``logit_softcap`` is applied inside the tile, so softcapped
+    models (gemma-2) get their actual CE and its exact gradient."""
+    from repro.kernels import ops as _kops
+
+    per_pos = _kops.linear_ce_loss(
+        x, y, targets, logit_softcap=logit_softcap,
+        block_n=block_n, block_c=block_c,
+    )
     return _mean_over_valid(per_pos, valid_mask), {}
 
 
@@ -305,6 +330,7 @@ _REGISTRY = {
     "ce": lambda **kw: ce,
     "ce_chunked": lambda **kw: functools.partial(ce_chunked, **kw),
     "ce_fused": lambda **kw: ce_fused,
+    "ce_fused_linear": lambda **kw: functools.partial(ce_fused_linear, **kw),
     "bce": lambda **kw: bce,
     "bce_plus": lambda **kw: functools.partial(bce_plus, **kw),
     "gbce": lambda **kw: functools.partial(gbce, **kw),
@@ -342,6 +368,12 @@ def loss_peak_elements(
         return n_positions * catalog
     if name in ("ce_chunked", "ce_fused"):
         return n_positions * min(8192, catalog)
+    if name == "ce_fused_linear":
+        # Fully fused linear CE: per-position f32 carries (loss, lse and
+        # the dX/dW streams' cotangent rows live one tile at a time in
+        # VMEM). HBM-resident loss-side state is V-independent — 4 f32
+        # vectors of length N plus one (block_n, block_c) logit tile.
+        return 4 * n_positions + min(256, n_positions) * min(512, catalog)
     if name in ("bce", "bce_plus", "gbce", "ce_minus", "ce_pop"):
         k = max(1, num_negatives)
         return n_positions * k + n_positions * k * d

@@ -58,8 +58,9 @@ class SCEConfig:
     use_mix: bool = True
     use_kernel: bool = False
     # Final-logit soft-capping (gemma-2): cap·tanh(logit/cap) applied to
-    # positive and in-bucket negative logits. Pure-jnp path only — the
-    # fused kernel asserts it off (DESIGN.md §Arch-applicability).
+    # positive and in-bucket negative logits. Both the pure-jnp path and
+    # the fused kernel honor it — the cap is applied inside the tile,
+    # before the collision/padding mask (KERNELS.md §linear_sce).
     logit_softcap: Optional[float] = None
 
     @staticmethod
@@ -288,14 +289,18 @@ def sce_loss(
         jnp.einsum("nxd,nxd->nx", x_b, pos_emb), cfg.logit_softcap
     )
 
-    if cfg.use_kernel and cfg.logit_softcap is None:
+    if cfg.use_kernel:
         from repro.kernels import ops as _kops
 
         # Fully fused candidate path: the kernel gathers Y[idx_y] rows
         # into VMEM on the fly (scalar prefetch) — the (n_b, b_y, d)
-        # candidate tensor and its VJP scatter never exist in HBM.
+        # candidate tensor and its VJP scatter never exist in HBM. The
+        # softcap is applied to negatives inside the tile; pos_logit is
+        # already capped above (its tanh derivative flows through the
+        # einsum's autodiff via the kernel's d_pos cotangent).
         losses = _kops.sce_gather_loss(
-            x_b, y, idx_y, tgt_b, idx_y, pos_logit
+            x_b, y, idx_y, tgt_b, idx_y, pos_logit,
+            logit_softcap=cfg.logit_softcap,
         )
     else:
         y_b = jnp.take(y, idx_y, axis=0)  # (n_b, b_y, d)

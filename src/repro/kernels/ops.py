@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import eval_fused as _eval_fused
 from repro.kernels import eval_topk as _eval_topk
 from repro.kernels import fused_ce as _fused_ce
+from repro.kernels import linear_sce as _linear_sce
 from repro.kernels import mips_topk as _mips_topk
 from repro.kernels import ref as _ref
 from repro.kernels import sce_bucket as _sce_bucket
@@ -54,17 +55,23 @@ def sce_bucket_loss(
     block_bx: int = 128,
     block_by: int = 256,
     interpret: bool | None = None,
+    logit_softcap: float | None = None,
 ):
-    """Fused in-bucket SCE losses (n_b, b_x). See kernels/sce_bucket.py."""
+    """Fused in-bucket SCE losses (n_b, b_x). See kernels/sce_bucket.py.
+    ``logit_softcap`` caps negatives inside the tile; ``pos_logit`` must
+    arrive already capped."""
     if interpret is None:
         interpret = _interpret_default()
     if interpret and _inside_shard_map(x_b, y_b, pos_logit):
         # Pallas interpret-mode (hlo_interpreter) cannot yet run inside
         # shard_map with VMA checking (jax 0.8 limitation); the pure-jnp
         # oracle is numerically identical. On TPU the kernel runs as-is.
-        return _ref.sce_bucket_loss_ref(x_b, y_b, tgt_b, cand_ids, pos_logit)
+        return _ref.sce_bucket_loss_ref(
+            x_b, y_b, tgt_b, cand_ids, pos_logit, logit_softcap
+        )
     return _sce_bucket.sce_bucket_loss(
-        x_b, y_b, tgt_b, cand_ids, pos_logit, block_bx, block_by, interpret
+        x_b, y_b, tgt_b, cand_ids, pos_logit, block_bx, block_by, interpret,
+        logit_softcap,
     )
 
 
@@ -77,14 +84,18 @@ def sce_bucket_plse(
     block_bx: int = 128,
     block_by: int = 256,
     interpret: bool | None = None,
+    logit_softcap: float | None = None,
 ):
     """Partial in-bucket logsumexp (union-mode building block), (n_b, b_x)."""
     if interpret is None:
         interpret = _interpret_default()
     if interpret and _inside_shard_map(x_b, y_b):
-        return _ref.sce_bucket_plse_ref(x_b, y_b, tgt_b, cand_ids)
+        return _ref.sce_bucket_plse_ref(
+            x_b, y_b, tgt_b, cand_ids, logit_softcap
+        )
     return _sce_bucket.sce_bucket_plse(
-        x_b, y_b, tgt_b, cand_ids, block_bx, block_by, interpret
+        x_b, y_b, tgt_b, cand_ids, block_bx, block_by, interpret,
+        logit_softcap,
     )
 
 
@@ -135,21 +146,26 @@ def sce_gather_loss(
     block_bx: int = 128,
     block_by: int = 256,
     interpret: bool | None = None,
+    logit_softcap: float | None = None,
 ):
     """Fused scalar-prefetch in-bucket SCE losses (n_b, b_x): candidate
     rows are gathered from the full ``y`` (C, d) table on the fly via
     ``idx_y`` — the ``(n_b, b_y, d)`` HBM candidate tensor and its VJP
     scatter never exist. See kernels/sce_prefetch.py. Inside
     ``shard_map`` on non-TPU backends the take + pure-jnp oracle runs
-    instead (numerically identical; the gather materializes there)."""
+    instead (numerically identical; the gather materializes there).
+    ``logit_softcap`` caps negatives inside the tile; ``pos_logit``
+    must arrive already capped."""
     if interpret is None:
         interpret = _interpret_default()
     if interpret and _inside_shard_map(x_b, y, pos_logit):
         y_b = jnp.take(y, jnp.clip(idx_y, 0, y.shape[0] - 1), axis=0)
-        return _ref.sce_bucket_loss_ref(x_b, y_b, tgt_b, cand_ids, pos_logit)
+        return _ref.sce_bucket_loss_ref(
+            x_b, y_b, tgt_b, cand_ids, pos_logit, logit_softcap
+        )
     return _sce_prefetch.sce_gather_loss(
         x_b, y, idx_y, tgt_b, cand_ids, pos_logit,
-        block_bx, block_by, interpret,
+        block_bx, block_by, interpret, logit_softcap,
     )
 
 
@@ -163,6 +179,7 @@ def sce_gather_plse(
     block_bx: int = 128,
     block_by: int = 256,
     interpret: bool | None = None,
+    logit_softcap: float | None = None,
 ):
     """Scalar-prefetch partial in-bucket logsumexp (n_b, b_x) — the
     distributed-merge building block with on-the-fly candidate gather
@@ -173,9 +190,10 @@ def sce_gather_plse(
         interpret = _interpret_default()
     if interpret and _inside_shard_map(x_b, y):
         y_b = jnp.take(y, jnp.clip(idx_y, 0, y.shape[0] - 1), axis=0)
-        return _ref.sce_bucket_plse_ref(x_b, y_b, tgt_b, cand_ids)
+        return _ref.sce_bucket_plse_ref(x_b, y_b, tgt_b, cand_ids, logit_softcap)
     return _sce_prefetch.sce_gather_plse(
-        x_b, y, idx_y, tgt_b, cand_ids, block_bx, block_by, interpret
+        x_b, y, idx_y, tgt_b, cand_ids, block_bx, block_by, interpret,
+        logit_softcap,
     )
 
 
@@ -205,6 +223,34 @@ def fused_ce_loss(
     if interpret and _inside_shard_map(x, y):
         return _ref.fused_ce_loss_ref(x, y, targets)
     return _fused_ce.fused_ce_loss(x, y, targets, block_n, block_c, interpret)
+
+
+def linear_ce_loss(
+    x,
+    w,
+    targets,
+    *,
+    logit_softcap: float | None = None,
+    block_n: int = 256,
+    block_c: int = 512,
+    interpret: bool | None = None,
+):
+    """Fused linear cross-entropy: per-position full-vocab CE loss (N,)
+    straight from ``(N, d)`` hidden states + the ``(V, d)`` head table —
+    the ``(N, V)`` logit matrix never exists, forward OR backward (dX
+    and dW stream the same tiles; the positive is extracted inside the
+    sweep, so ``logit_softcap`` caps it consistently with the
+    negatives). See kernels/linear_sce.py; inside ``shard_map`` on
+    non-TPU backends the chunked pure-jnp reference runs instead."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if interpret and _inside_shard_map(x, w):
+        return _ref.linear_ce_loss_ref(
+            x, w, targets, logit_softcap=logit_softcap, chunk=block_c
+        )
+    return _linear_sce.linear_ce_loss(
+        x, w, targets, logit_softcap, block_n, block_c, interpret
+    )
 
 
 def eval_fused(

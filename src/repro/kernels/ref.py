@@ -12,16 +12,20 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def _masked_neg_logits(x_b, y_b, tgt_b, cand_ids):
+def _masked_neg_logits(x_b, y_b, tgt_b, cand_ids, logit_softcap=None):
     """Collision- and validity-masked in-bucket negative logits (f32).
 
     Candidates equal to the position's target are not negatives;
     candidates with a NEGATIVE id are invalid slots (padding, or — in
     the distributed ids-only exact mode — candidates owned by another
-    catalog shard) and are masked for every position.
+    catalog shard) and are masked for every position. ``logit_softcap``
+    (gemma-2: ``cap·tanh(logit/cap)``) applies BEFORE the mask — masked
+    slots must stay at NEG_INF, not ``−cap``.
     """
     f32 = jnp.float32
     neg = jnp.einsum("nxd,nyd->nxy", x_b.astype(f32), y_b.astype(f32))
+    if logit_softcap is not None:
+        neg = logit_softcap * jnp.tanh(neg / logit_softcap)
     collide = cand_ids[:, None, :] == tgt_b[:, :, None]
     invalid = jnp.logical_or(collide, (cand_ids < 0)[:, None, :])
     return jnp.where(invalid, NEG_INF, neg)
@@ -32,7 +36,8 @@ def sce_bucket_loss_ref(
     y_b: jax.Array,  # (n_b, b_y, d)
     tgt_b: jax.Array,  # (n_b, b_x) int32 target catalog ids
     cand_ids: jax.Array,  # (n_b, b_y) int32 bucket-candidate catalog ids
-    pos_logit: jax.Array,  # (n_b, b_x)
+    pos_logit: jax.Array,  # (n_b, b_x) — already capped when softcapping
+    logit_softcap=None,
 ) -> jax.Array:
     """In-bucket CE (Algorithm 1, lines 12–15). Returns (n_b, b_x) losses.
 
@@ -41,7 +46,7 @@ def sce_bucket_loss_ref(
     of the negative set.
     """
     f32 = jnp.float32
-    neg = _masked_neg_logits(x_b, y_b, tgt_b, cand_ids)
+    neg = _masked_neg_logits(x_b, y_b, tgt_b, cand_ids, logit_softcap)
     pos = pos_logit.astype(f32)
     m = jnp.maximum(jnp.max(neg, axis=-1), pos)
     s = jnp.sum(jnp.exp(neg - m[..., None]), axis=-1) + jnp.exp(pos - m)
@@ -53,11 +58,12 @@ def sce_bucket_plse_ref(
     y_b: jax.Array,  # (n_b, b_y, d)
     tgt_b: jax.Array,  # (n_b, b_x) int32
     cand_ids: jax.Array,  # (n_b, b_y) int32
+    logit_softcap=None,
 ) -> jax.Array:
     """Partial logsumexp over in-bucket negatives (collision- and
     validity-masked, no positive term) — the building block of the
     distributed partial-merge modes. → (n_b, b_x) f32."""
-    neg = _masked_neg_logits(x_b, y_b, tgt_b, cand_ids)
+    neg = _masked_neg_logits(x_b, y_b, tgt_b, cand_ids, logit_softcap)
     m = jnp.max(neg, axis=-1)
     s = jnp.sum(jnp.exp(neg - m[..., None]), axis=-1)
     return m + jnp.log(jnp.maximum(s, 1e-30))
@@ -379,6 +385,63 @@ def eval_fused_ref(
         return vals, ids, gt, eq, tgt_scores, m, se
     vals, ids, gt, eq = carry
     return vals, ids, gt, eq, tgt_scores, None, None
+
+
+def linear_ce_loss_ref(
+    x: jax.Array,  # (N, d) hidden states
+    w: jax.Array,  # (V, d) head table
+    targets: jax.Array,  # (N,) i32 vocab ids
+    *,
+    logit_softcap=None,
+    chunk: int = 512,
+) -> jax.Array:
+    """Chunked streaming linear-CE — pure-jnp oracle for
+    ``kernels/linear_sce.py`` (and the path used inside ``shard_map``,
+    see ``kernels/ops.py``).
+
+    One ``lax.scan`` over ``(chunk, d)`` vocab slices carrying the online
+    logsumexp ``(m, s)`` plus the per-position positive accumulator —
+    the target's (capped) logit is plucked from the chunk it streams by
+    in, mirroring the kernel's in-tile extraction. ``logit_softcap``
+    applies to every logit before it enters either accumulator (CE is
+    not cap-invariant). Differentiable through ordinary autodiff (the
+    scan's saved residuals make the *backward* memory O(N·V) here —
+    oracle only; the kernel recomputes). → (N,) losses in ``x.dtype``.
+    """
+    n, _ = x.shape
+    c = w.shape[0]
+    chunk = min(chunk, c)
+    pad = (-c) % chunk
+    wp = jnp.pad(w, ((0, pad), (0, 0)))
+    n_chunks = (c + pad) // chunk
+    f32 = jnp.float32
+    x32 = x.astype(f32)
+    tid = targets.astype(jnp.int32)[:, None]
+    cap = logit_softcap
+
+    def body(carry, jc):
+        m, s, pos = carry
+        rows = jax.lax.dynamic_slice_in_dim(wp, jc * chunk, chunk, 0)
+        logits = x32 @ rows.astype(f32).T  # (n, chunk)
+        capped = logits if cap is None else cap * jnp.tanh(logits / cap)
+        idx = jc * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        lv = jnp.where((idx < c)[None, :], capped, NEG_INF)
+        pos = pos + jnp.sum(
+            jnp.where(jnp.broadcast_to(idx[None, :], lv.shape) == tid, lv, 0.0),
+            axis=-1,
+        )
+        m_new = jnp.maximum(m, jnp.max(lv, axis=-1))
+        s = s * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(lv - m_new[:, None]), axis=-1
+        )
+        return (m_new, s, pos), None
+
+    (m, s, pos), _ = jax.lax.scan(
+        body,
+        (jnp.full((n,), NEG_INF, f32), jnp.zeros((n,), f32), jnp.zeros((n,), f32)),
+        jnp.arange(n_chunks),
+    )
+    return (m + jnp.log(s) - pos).astype(x.dtype)
 
 
 def fused_lse_ref(x: jax.Array, y: jax.Array) -> jax.Array:

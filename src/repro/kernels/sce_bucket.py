@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.linear_sce import _cap_deriv, _capped
+
 NEG_INF = -1e30
 
 
@@ -49,6 +51,7 @@ def _fwd_kernel(
     n_by_tiles: int,
     by_actual: int,
     block_by: int,
+    logit_softcap: float | None,
 ):
     j = pl.program_id(2)
     pos = pos_ref[0].astype(jnp.float32)
@@ -62,6 +65,9 @@ def _fwd_kernel(
     x = x_ref[0]
     y = y_ref[0]
     logits = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    # Softcap INSIDE the tile, before the invalid mask (CE is not
+    # cap-invariant); the folded positive arrives pre-capped.
+    logits = _capped(logits, logit_softcap)
 
     # Mask (a) candidates that ARE the positive class (not negatives),
     # (b) candidates with a negative = invalid id (padding, or rows owned
@@ -111,6 +117,7 @@ def _fwd_plse_kernel(
     n_by_tiles: int,
     by_actual: int,
     block_by: int,
+    logit_softcap: float | None,
 ):
     j = pl.program_id(2)
 
@@ -122,6 +129,7 @@ def _fwd_plse_kernel(
     x = x_ref[0]
     y = y_ref[0]
     logits = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    logits = _capped(logits, logit_softcap)
     col_ids = j * block_by + jax.lax.broadcasted_iota(
         jnp.int32, logits.shape, 1
     )
@@ -162,6 +170,7 @@ def _bwd_dx_kernel(
     n_by_tiles: int,
     by_actual: int,
     block_by: int,
+    logit_softcap: float | None,
 ):
     j = pl.program_id(2)
 
@@ -172,6 +181,7 @@ def _bwd_dx_kernel(
     x = x_ref[0]
     y = y_ref[0]
     logits = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    capped = _capped(logits, logit_softcap)
     col_ids = j * block_by + jax.lax.broadcasted_iota(
         jnp.int32, logits.shape, 1
     )
@@ -180,8 +190,9 @@ def _bwd_dx_kernel(
         jnp.logical_or(collide, cand_ref[0][None, :] < 0),
         col_ids >= by_actual,
     )
-    p = jnp.where(invalid, 0.0, jnp.exp(logits - lse_ref[0][:, None]))
-    gw = p * g_ref[0][:, None].astype(jnp.float32)  # dL/dlogit tile
+    p = jnp.where(invalid, 0.0, jnp.exp(capped - lse_ref[0][:, None]))
+    gw = p * _cap_deriv(capped, logit_softcap)  # dL/dlogit tile
+    gw = gw * g_ref[0][:, None].astype(jnp.float32)
     acc_scr[...] += jnp.dot(
         gw.astype(y.dtype), y, preferred_element_type=jnp.float32
     )
@@ -208,6 +219,7 @@ def _bwd_dy_kernel(
     n_bx_tiles: int,
     by_actual: int,
     block_by: int,
+    logit_softcap: float | None,
 ):
     # grid = (n_b, n_by_tiles, n_bx_tiles): program_id(1) = b_y tile,
     # program_id(2) = b_x tile (innermost).
@@ -221,6 +233,7 @@ def _bwd_dy_kernel(
     x = x_ref[0]
     y = y_ref[0]
     logits = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    capped = _capped(logits, logit_softcap)
     col_ids = jy * block_by + jax.lax.broadcasted_iota(
         jnp.int32, logits.shape, 1
     )
@@ -229,8 +242,9 @@ def _bwd_dy_kernel(
         jnp.logical_or(collide, cand_ref[0][None, :] < 0),
         col_ids >= by_actual,
     )
-    p = jnp.where(invalid, 0.0, jnp.exp(logits - lse_ref[0][:, None]))
-    gw = p * g_ref[0][:, None].astype(jnp.float32)
+    p = jnp.where(invalid, 0.0, jnp.exp(capped - lse_ref[0][:, None]))
+    gw = p * _cap_deriv(capped, logit_softcap)
+    gw = gw * g_ref[0][:, None].astype(jnp.float32)
     acc_scr[...] += jnp.dot(
         gw.T.astype(x.dtype), x, preferred_element_type=jnp.float32
     )
@@ -267,7 +281,8 @@ def _sds(shape, dtype, *operands):
     return jax.ShapeDtypeStruct(shape, dtype)
 
 
-def _fwd(x_b, y_b, tgt_b, cand_ids, pos_logit, *, block_bx, block_by, interpret):
+def _fwd(x_b, y_b, tgt_b, cand_ids, pos_logit, *, block_bx, block_by,
+         interpret, logit_softcap=None):
     n_b, b_x, d = x_b.shape
     b_y = y_b.shape[1]
     block_bx = min(block_bx, b_x)
@@ -283,7 +298,8 @@ def _fwd(x_b, y_b, tgt_b, cand_ids, pos_logit, *, block_bx, block_by, interpret)
     n_bx, n_by = bx_p // block_bx, by_p // block_by
 
     kernel = functools.partial(
-        _fwd_kernel, n_by_tiles=n_by, by_actual=b_y, block_by=block_by
+        _fwd_kernel, n_by_tiles=n_by, by_actual=b_y, block_by=block_by,
+        logit_softcap=logit_softcap,
     )
     loss, lse = pl.pallas_call(
         kernel,
@@ -312,7 +328,8 @@ def _fwd(x_b, y_b, tgt_b, cand_ids, pos_logit, *, block_bx, block_by, interpret)
     return loss[:, :b_x], lse[:, :b_x]
 
 
-def _bwd(x_b, y_b, tgt_b, cand_ids, lse, g, *, block_bx, block_by, interpret):
+def _bwd(x_b, y_b, tgt_b, cand_ids, lse, g, *, block_bx, block_by,
+         interpret, logit_softcap=None):
     n_b, b_x, d = x_b.shape
     b_y = y_b.shape[1]
     block_bx = min(block_bx, b_x)
@@ -329,7 +346,8 @@ def _bwd(x_b, y_b, tgt_b, cand_ids, lse, g, *, block_bx, block_by, interpret):
 
     dx = pl.pallas_call(
         functools.partial(
-            _bwd_dx_kernel, n_by_tiles=n_by, by_actual=b_y, block_by=block_by
+            _bwd_dx_kernel, n_by_tiles=n_by, by_actual=b_y,
+            block_by=block_by, logit_softcap=logit_softcap,
         ),
         grid=(n_b, n_bx, n_by),
         in_specs=[
@@ -348,7 +366,8 @@ def _bwd(x_b, y_b, tgt_b, cand_ids, lse, g, *, block_bx, block_by, interpret):
 
     dy = pl.pallas_call(
         functools.partial(
-            _bwd_dy_kernel, n_bx_tiles=n_bx, by_actual=b_y, block_by=block_by
+            _bwd_dy_kernel, n_bx_tiles=n_bx, by_actual=b_y,
+            block_by=block_by, logit_softcap=logit_softcap,
         ),
         grid=(n_b, n_by, n_bx),
         in_specs=[
@@ -371,7 +390,7 @@ def _bwd(x_b, y_b, tgt_b, cand_ids, lse, g, *, block_bx, block_by, interpret):
 # ---------------------------------------------------------------------------
 # Public op with custom VJP
 # ---------------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
 def sce_bucket_loss(
     x_b,
     y_b,
@@ -381,32 +400,39 @@ def sce_bucket_loss(
     block_bx: int = 128,
     block_by: int = 256,
     interpret: bool = False,
+    logit_softcap: float | None = None,
 ):
     """Fused in-bucket SCE losses: ``(n_b, b_x)`` per-(bucket, position) CE.
 
     Matches ``repro.kernels.ref.sce_bucket_loss_ref`` exactly (same masking
     semantics); never materializes the ``(n_b, b_x, b_y)`` logits.
+    ``logit_softcap`` caps the negatives inside the tile; ``pos_logit``
+    must arrive already capped.
     """
     loss, _ = _fwd(
         x_b, y_b, tgt_b, cand_ids, pos_logit,
         block_bx=block_bx, block_by=block_by, interpret=interpret,
+        logit_softcap=logit_softcap,
     )
     return loss
 
 
-def _vjp_fwd(x_b, y_b, tgt_b, cand_ids, pos_logit, block_bx, block_by, interpret):
+def _vjp_fwd(x_b, y_b, tgt_b, cand_ids, pos_logit, block_bx, block_by,
+             interpret, logit_softcap):
     loss, lse = _fwd(
         x_b, y_b, tgt_b, cand_ids, pos_logit,
         block_bx=block_bx, block_by=block_by, interpret=interpret,
+        logit_softcap=logit_softcap,
     )
     return loss, (x_b, y_b, tgt_b, cand_ids, pos_logit, lse)
 
 
-def _vjp_bwd(block_bx, block_by, interpret, res, g):
+def _vjp_bwd(block_bx, block_by, interpret, logit_softcap, res, g):
     x_b, y_b, tgt_b, cand_ids, pos_logit, lse = res
     dx, dy = _bwd(
         x_b, y_b, tgt_b, cand_ids, lse, g,
         block_bx=block_bx, block_by=block_by, interpret=interpret,
+        logit_softcap=logit_softcap,
     )
     # d loss / d pos = (softmax prob of the positive) - 1, times upstream g.
     p_pos = jnp.exp(pos_logit.astype(jnp.float32) - lse)
@@ -422,7 +448,8 @@ sce_bucket_loss.defvjp(_vjp_fwd, _vjp_bwd)
 # d plse / d logits = softmax over the masked in-bucket negatives — the
 # SAME streaming backward kernels as the loss op (they only read lse).
 # ---------------------------------------------------------------------------
-def _fwd_plse(x_b, y_b, tgt_b, cand_ids, *, block_bx, block_by, interpret):
+def _fwd_plse(x_b, y_b, tgt_b, cand_ids, *, block_bx, block_by, interpret,
+              logit_softcap=None):
     n_b, b_x, d = x_b.shape
     b_y = y_b.shape[1]
     block_bx = min(block_bx, b_x)
@@ -437,7 +464,7 @@ def _fwd_plse(x_b, y_b, tgt_b, cand_ids, *, block_bx, block_by, interpret):
     lse = pl.pallas_call(
         functools.partial(
             _fwd_plse_kernel, n_by_tiles=n_by, by_actual=b_y,
-            block_by=block_by,
+            block_by=block_by, logit_softcap=logit_softcap,
         ),
         grid=(n_b, n_bx, n_by),
         in_specs=[
@@ -457,7 +484,7 @@ def _fwd_plse(x_b, y_b, tgt_b, cand_ids, *, block_bx, block_by, interpret):
     return lse[:, :b_x]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
 def sce_bucket_plse(
     x_b,
     y_b,
@@ -466,29 +493,35 @@ def sce_bucket_plse(
     block_bx: int = 128,
     block_by: int = 256,
     interpret: bool = False,
+    logit_softcap: float | None = None,
 ):
     """Per-(bucket, position) partial logsumexp over the in-bucket
     negatives (collision-masked; no positive term) — (n_b, b_x) f32.
-    Matches ``ref.sce_bucket_plse_ref``."""
+    Matches ``ref.sce_bucket_plse_ref``; ``logit_softcap`` caps inside
+    the tile."""
     return _fwd_plse(
         x_b, y_b, tgt_b, cand_ids,
         block_bx=block_bx, block_by=block_by, interpret=interpret,
+        logit_softcap=logit_softcap,
     )
 
 
-def _plse_vjp_fwd(x_b, y_b, tgt_b, cand_ids, block_bx, block_by, interpret):
+def _plse_vjp_fwd(x_b, y_b, tgt_b, cand_ids, block_bx, block_by, interpret,
+                  logit_softcap):
     lse = _fwd_plse(
         x_b, y_b, tgt_b, cand_ids,
         block_bx=block_bx, block_by=block_by, interpret=interpret,
+        logit_softcap=logit_softcap,
     )
     return lse, (x_b, y_b, tgt_b, cand_ids, lse)
 
 
-def _plse_vjp_bwd(block_bx, block_by, interpret, res, g):
+def _plse_vjp_bwd(block_bx, block_by, interpret, logit_softcap, res, g):
     x_b, y_b, tgt_b, cand_ids, lse = res
     dx, dy = _bwd(
         x_b, y_b, tgt_b, cand_ids, lse, g,
         block_bx=block_bx, block_by=block_by, interpret=interpret,
+        logit_softcap=logit_softcap,
     )
     return dx, dy, None, None
 

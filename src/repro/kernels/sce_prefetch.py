@@ -55,6 +55,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.linear_sce import _cap_deriv, _capped
 from repro.kernels.sce_bucket import _pad_to, _sds
 
 NEG_INF = -1e30
@@ -82,6 +83,7 @@ def _gfwd_kernel(
     by_actual: int,
     block_by: int,
     with_pos: bool,
+    logit_softcap: float | None,
 ):
     del idx_ref  # consumed by the index maps
     if with_pos:
@@ -113,6 +115,11 @@ def _gfwd_kernel(
         logits = jnp.dot(
             x, gather_scr[...].T, preferred_element_type=jnp.float32
         )
+        # Softcap INSIDE the tile, before the invalid mask (CE is not
+        # cap-invariant; cap(NEG_INF) would be −cap). The folded
+        # positive is pre-capped by the caller, so the m = pos init is
+        # consistent.
+        logits = _capped(logits, logit_softcap)
         invalid = _tile_mask(
             cand_ref[0], tgt_ref[0], j // block_by, block_by, by_actual
         )
@@ -157,6 +164,7 @@ def _gbwd_dx_kernel(
     n_by_steps: int,
     by_actual: int,
     block_by: int,
+    logit_softcap: float | None,
 ):
     j = pl.program_id(2)
 
@@ -172,11 +180,13 @@ def _gbwd_dx_kernel(
         x = x_ref[0]
         tile = gather_scr[...]
         logits = jnp.dot(x, tile.T, preferred_element_type=jnp.float32)
+        capped = _capped(logits, logit_softcap)
         invalid = _tile_mask(
             cand_ref[0], tgt_ref[0], j // block_by, block_by, by_actual
         )
-        p = jnp.where(invalid, 0.0, jnp.exp(logits - lse_ref[0][:, None]))
-        gw = p * g_ref[0][:, None].astype(jnp.float32)
+        p = jnp.where(invalid, 0.0, jnp.exp(capped - lse_ref[0][:, None]))
+        gw = p * _cap_deriv(capped, logit_softcap)
+        gw = gw * g_ref[0][:, None].astype(jnp.float32)
         acc_scr[...] += jnp.dot(
             gw.astype(tile.dtype), tile, preferred_element_type=jnp.float32
         )
@@ -204,6 +214,7 @@ def _gbwd_dy_kernel(
     *,
     n_bx_tiles: int,
     by_actual: int,
+    logit_softcap: float | None,
 ):
     n = pl.program_id(0)
     jy = pl.program_id(1)
@@ -217,13 +228,15 @@ def _gbwd_dy_kernel(
     x = x_ref[0]  # (bx_t, d)
     y_vec = yrow_ref[0]  # (d,)
     col = jnp.dot(x, y_vec, preferred_element_type=jnp.float32)  # (bx_t,)
+    capped = _capped(col, logit_softcap)
     cand_v = cand_ref[n, jy]
     invalid = jnp.logical_or(
         jnp.logical_or(cand_v < 0, jy >= by_actual),
         tgt_ref[0] == cand_v,
     )
-    p = jnp.where(invalid, 0.0, jnp.exp(col - lse_ref[0]))
-    gw = p * g_ref[0].astype(jnp.float32)  # (bx_t,)
+    p = jnp.where(invalid, 0.0, jnp.exp(capped - lse_ref[0]))
+    gw = p * _cap_deriv(capped, logit_softcap)
+    gw = gw * g_ref[0].astype(jnp.float32)  # (bx_t,)
     acc_scr[...] += jnp.dot(
         gw[None, :].astype(x.dtype), x, preferred_element_type=jnp.float32
     )
@@ -272,7 +285,7 @@ def _prep(x_b, y, idx_y, tgt_b, cand_ids, block_bx, block_by):
 
 
 def _gfwd(x_b, y, idx_y, tgt_b, cand_ids, pos_logit, *, block_bx, block_by,
-          interpret, with_pos):
+          interpret, with_pos, logit_softcap=None):
     xp, tp, ip, cp, s = _prep(
         x_b, y, idx_y, tgt_b, cand_ids, block_bx, block_by
     )
@@ -285,6 +298,7 @@ def _gfwd(x_b, y, idx_y, tgt_b, cand_ids, pos_logit, *, block_bx, block_by,
         by_actual=s["b_y"],
         block_by=block_by,
         with_pos=with_pos,
+        logit_softcap=logit_softcap,
     )
     in_specs = [
         pl.BlockSpec((1, block_bx), lambda n, i, j, idx: (n, i)),  # tgt
@@ -339,7 +353,7 @@ def _gfwd(x_b, y, idx_y, tgt_b, cand_ids, pos_logit, *, block_bx, block_by,
 
 
 def _gbwd(x_b, y, idx_y, tgt_b, cand_ids, lse, g, *, block_bx, block_by,
-          interpret):
+          interpret, logit_softcap=None):
     xp, tp, ip, cp, s = _prep(
         x_b, y, idx_y, tgt_b, cand_ids, block_bx, block_by
     )
@@ -354,6 +368,7 @@ def _gbwd(x_b, y, idx_y, tgt_b, cand_ids, lse, g, *, block_bx, block_by,
             n_by_steps=by_p,
             by_actual=s["b_y"],
             block_by=block_by,
+            logit_softcap=logit_softcap,
         ),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
@@ -387,6 +402,7 @@ def _gbwd(x_b, y, idx_y, tgt_b, cand_ids, lse, g, *, block_bx, block_by,
             _gbwd_dy_kernel,
             n_bx_tiles=s["n_bx"],
             by_actual=s["b_y"],
+            logit_softcap=logit_softcap,
         ),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,  # idx_y (index maps) + cand_ids (values)
@@ -422,7 +438,7 @@ def _gbwd(x_b, y, idx_y, tgt_b, cand_ids, lse, g, *, block_bx, block_by,
 # ---------------------------------------------------------------------------
 # Public ops with custom VJP
 # ---------------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
 def sce_gather_loss(
     x_b,
     y,
@@ -433,36 +449,41 @@ def sce_gather_loss(
     block_bx: int = 128,
     block_by: int = 256,
     interpret: bool = False,
+    logit_softcap: float | None = None,
 ):
     """Fused in-bucket SCE losses with on-the-fly candidate gather:
     ``(n_b, b_x)`` per-(bucket, position) CE from ``x_b`` and the FULL
     catalog ``y (C, d)`` + gather rows ``idx_y (n_b, b_y)``. Matches
     ``ref.sce_bucket_loss_ref(x_b, y[idx_y], tgt_b, cand_ids, pos)``;
     the ``(n_b, b_y, d)`` candidate tensor never exists, and ``dY``
-    lands directly in a ``(C, d)`` buffer (no gather-VJP scatter)."""
+    lands directly in a ``(C, d)`` buffer (no gather-VJP scatter).
+    ``logit_softcap`` caps every negative logit INSIDE the tile;
+    ``pos_logit`` must arrive already capped (its tanh derivative flows
+    through the caller's autodiff via the ``d_pos`` cotangent)."""
     loss, _ = _gfwd(
         x_b, y, idx_y, tgt_b, cand_ids, pos_logit,
         block_bx=block_bx, block_by=block_by, interpret=interpret,
-        with_pos=True,
+        with_pos=True, logit_softcap=logit_softcap,
     )
     return loss
 
 
 def _loss_vjp_fwd(x_b, y, idx_y, tgt_b, cand_ids, pos_logit, block_bx,
-                  block_by, interpret):
+                  block_by, interpret, logit_softcap):
     loss, lse = _gfwd(
         x_b, y, idx_y, tgt_b, cand_ids, pos_logit,
         block_bx=block_bx, block_by=block_by, interpret=interpret,
-        with_pos=True,
+        with_pos=True, logit_softcap=logit_softcap,
     )
     return loss, (x_b, y, idx_y, tgt_b, cand_ids, pos_logit, lse)
 
 
-def _loss_vjp_bwd(block_bx, block_by, interpret, res, g):
+def _loss_vjp_bwd(block_bx, block_by, interpret, logit_softcap, res, g):
     x_b, y, idx_y, tgt_b, cand_ids, pos_logit, lse = res
     dx, dy = _gbwd(
         x_b, y, idx_y, tgt_b, cand_ids, lse, g,
         block_bx=block_bx, block_by=block_by, interpret=interpret,
+        logit_softcap=logit_softcap,
     )
     p_pos = jnp.exp(pos_logit.astype(jnp.float32) - lse)
     d_pos = ((p_pos - 1.0) * g.astype(jnp.float32)).astype(pos_logit.dtype)
@@ -472,7 +493,7 @@ def _loss_vjp_bwd(block_bx, block_by, interpret, res, g):
 sce_gather_loss.defvjp(_loss_vjp_fwd, _loss_vjp_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
 def sce_gather_plse(
     x_b,
     y,
@@ -482,33 +503,36 @@ def sce_gather_plse(
     block_bx: int = 128,
     block_by: int = 256,
     interpret: bool = False,
+    logit_softcap: float | None = None,
 ):
     """Partial in-bucket logsumexp with on-the-fly candidate gather —
     ``(n_b, b_x)`` f32, the distributed-merge building block. Matches
     ``ref.sce_bucket_plse_ref(x_b, y[idx_y], tgt_b, cand_ids)`` with
-    negative ``cand_ids`` masked (padding / other-shard-owned)."""
+    negative ``cand_ids`` masked (padding / other-shard-owned);
+    ``logit_softcap`` caps inside the tile."""
     return _gfwd(
         x_b, y, idx_y, tgt_b, cand_ids, None,
         block_bx=block_bx, block_by=block_by, interpret=interpret,
-        with_pos=False,
+        with_pos=False, logit_softcap=logit_softcap,
     )
 
 
 def _plse_vjp_fwd(x_b, y, idx_y, tgt_b, cand_ids, block_bx, block_by,
-                  interpret):
+                  interpret, logit_softcap):
     lse = _gfwd(
         x_b, y, idx_y, tgt_b, cand_ids, None,
         block_bx=block_bx, block_by=block_by, interpret=interpret,
-        with_pos=False,
+        with_pos=False, logit_softcap=logit_softcap,
     )
     return lse, (x_b, y, idx_y, tgt_b, cand_ids, lse)
 
 
-def _plse_vjp_bwd(block_bx, block_by, interpret, res, g):
+def _plse_vjp_bwd(block_bx, block_by, interpret, logit_softcap, res, g):
     x_b, y, idx_y, tgt_b, cand_ids, lse = res
     dx, dy = _gbwd(
         x_b, y, idx_y, tgt_b, cand_ids, lse, g,
         block_bx=block_bx, block_by=block_by, interpret=interpret,
+        logit_softcap=logit_softcap,
     )
     return dx, dy, None, None, None
 

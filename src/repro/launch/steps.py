@@ -81,13 +81,19 @@ def build_sce_config(
 
 
 def _vocab_loss(
-    x, y, targets, valid, key, *, loss_name, sce_cfg, sce_mode, mesh
+    x, y, targets, valid, key, *, loss_name, sce_cfg, sce_mode, mesh,
+    logit_softcap: Optional[float] = None,
 ):
     """Dispatch the LM-head / catalog loss.
 
     sce_mode: "exact" | "union" (shard_map distributed SCE variants, see
     core/distributed_sce.py) | "gspmd" (global-bucket paper-literal SCE,
     partitioned by GSPMD — the §Perf baseline).
+
+    ``logit_softcap`` (gemma-2 final-logit cap) reaches every CE
+    variant that supports it: the SCE paths carry it inside
+    ``sce_cfg``; ``ce_chunked`` caps inside its streaming scan;
+    ``ce_fused_linear`` caps inside the Pallas tile.
     """
     if loss_name == "sce":
         if sce_mode in ("exact", "union") and mesh is not None:
@@ -99,7 +105,16 @@ def _vocab_loss(
             x, y, targets, key=key, cfg=sce_cfg, valid_mask=valid
         )
     if loss_name == "ce_chunked":
-        loss, _ = ce_chunked(x, y, targets, valid_mask=valid)
+        loss, _ = ce_chunked(
+            x, y, targets, valid_mask=valid, logit_softcap=logit_softcap
+        )
+        return loss
+    if loss_name == "ce_fused_linear":
+        from repro.core.losses import ce_fused_linear
+
+        loss, _ = ce_fused_linear(
+            x, y, targets, valid_mask=valid, logit_softcap=logit_softcap
+        )
         return loss
     fn = make_loss(loss_name)
     loss, _ = fn(x, y, targets, valid_mask=valid, key=key)
@@ -208,6 +223,7 @@ def make_lm_train_step(
                 sce_cfg=sce_cfg,
                 sce_mode=sce_mode,
                 mesh=mesh,
+                logit_softcap=cfg.final_softcap,
             )
             return loss + aux
         return jax.value_and_grad(loss_fn)(params)
@@ -297,6 +313,7 @@ def make_seqrec_train_step(
                 sce_cfg=sce_cfg,
                 sce_mode=sce_mode,
                 mesh=mesh,
+                logit_softcap=getattr(cfg, "final_softcap", None),
             )
 
         return jax.value_and_grad(loss_fn)(params)

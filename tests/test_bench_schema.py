@@ -1,7 +1,8 @@
 """Schema smoke tests for the CI benchmark artifacts (ISSUE 4/5
 satellites): run the ``--json`` bench CLIs at smoke scale and assert
 the required keys/types of ``BENCH_metric_memory.json`` /
-``BENCH_sce_pipeline.json`` / ``BENCH_eval_pipeline.json`` — so
+``BENCH_sce_pipeline.json`` / ``BENCH_eval_pipeline.json`` /
+``BENCH_lm_loss.json`` — so
 benchmark refactors can't silently break the perf-trajectory tracking
 the CI artifacts accumulate."""
 import json
@@ -147,3 +148,50 @@ def test_eval_pipeline_json_schema(tmp_path):
         assert ratio <= bound, (protocol, ratio)
         assert fused["hbm_bytes"] < twopass["hbm_bytes"], protocol
         assert fused["peak_elems"] <= twopass["peak_elems"], protocol
+
+
+def test_lm_loss_json_schema(tmp_path):
+    """BENCH_lm_loss.json: one LM-head training step, three losses —
+    all three rows present with throughput/peak columns and the
+    machine-independent ``*_vs_naive`` ratios the trajectory check
+    gates; the gradcheck block (the real Pallas linear kernel vs the
+    dense oracle, softcap on AND off) passes its documented
+    tolerances; peak loss-side elements shrink vs naive CE."""
+    doc = _run_bench(
+        tmp_path, "benchmarks.kernel_bench",
+        "--mode", "lm-loss",
+        "--positions", "128", "--catalog", "2048", "--d", "16",
+    )
+    assert set(doc) == {"mode", "rows", "derived", "gradcheck"}
+    assert doc["mode"] == "lm-loss"
+    assert isinstance(doc["derived"], str) and "tokens/s" in doc["derived"]
+    rows = {r["loss"]: r for r in doc["rows"]}
+    assert set(rows) == {"ce", "ce_fused_linear", "sce"}
+    spec = {
+        "loss": str,
+        "tokens": numbers.Integral,
+        "vocab": numbers.Integral,
+        "d": numbers.Integral,
+        "wall_us": numbers.Real,
+        "tokens_per_s": numbers.Real,
+        "peak_loss_elems": numbers.Integral,
+        "tokens_per_s_vs_naive": numbers.Real,
+        "peak_elems_vs_naive": numbers.Real,
+    }
+    for name, row in rows.items():
+        _assert_row(row, spec, f"lm_loss[{name}]")
+    assert rows["ce"]["tokens_per_s_vs_naive"] == pytest.approx(1.0)
+    assert rows["ce"]["peak_loss_elems"] == 128 * 2048
+    for name in ("ce_fused_linear", "sce"):
+        assert rows[name]["peak_elems_vs_naive"] < 1.0, name
+    caps = set()
+    for gc in doc["gradcheck"]:
+        _assert_row(gc, {
+            "loss_rel_err": numbers.Real,
+            "dx_max_abs_err": numbers.Real,
+            "dw_max_abs_err": numbers.Real,
+            "passes_tolerances": bool,
+        }, f"lm_loss.gradcheck[{gc.get('logit_softcap')}]")
+        assert gc["passes_tolerances"], gc
+        caps.add(gc["logit_softcap"])
+    assert caps == {None, 30.0}

@@ -1,0 +1,113 @@
+"""benchmarks/trajectory.py: the BENCH_*.json baseline gate.
+
+Pure-python unit tests (no benches run): schema drift and
+bad-direction ratio movement fail; good-direction movement and wall
+-time noise pass; a bench dropping out of CI fails; ``--update``
+snapshots."""
+import json
+
+import pytest
+
+from benchmarks import trajectory as T
+
+
+def _payload(tps_ratio=2.0, peak_ratio=0.05, wall=100.0):
+    return {
+        "mode": "lm-loss",
+        "derived": "x",
+        "rows": [
+            {"loss": "ce", "wall_us": wall, "tokens_per_s_vs_naive": 1.0,
+             "peak_elems_vs_naive": 1.0},
+            {"loss": "sce", "wall_us": wall,
+             "tokens_per_s_vs_naive": tps_ratio,
+             "peak_elems_vs_naive": peak_ratio},
+        ],
+    }
+
+
+def test_identical_passes():
+    assert T.compare(_payload(), _payload(), "f") == []
+
+
+def test_wall_time_is_not_gated():
+    """10x slower wall clock (a slower CI runner) must NOT fail."""
+    assert T.compare(_payload(wall=1000.0), _payload(wall=100.0), "f") == []
+
+
+def test_throughput_ratio_regression_fails():
+    fails = T.compare(_payload(tps_ratio=1.0), _payload(tps_ratio=2.0), "f")
+    assert len(fails) == 1 and "tokens_per_s_vs_naive" in fails[0]
+
+
+def test_peak_ratio_growth_fails():
+    fails = T.compare(_payload(peak_ratio=0.5), _payload(peak_ratio=0.05), "f")
+    assert len(fails) == 1 and "peak_elems_vs_naive" in fails[0]
+
+
+def test_improvement_passes():
+    assert T.compare(
+        _payload(tps_ratio=4.0, peak_ratio=0.01), _payload(), "f") == []
+
+
+def test_within_threshold_passes():
+    # 20% worse < the 25% gate
+    assert T.compare(_payload(tps_ratio=1.6), _payload(tps_ratio=2.0),
+                     "f") == []
+
+
+def test_schema_drift_fails():
+    cur = _payload()
+    del cur["rows"][0]["wall_us"]
+    fails = T.compare(cur, _payload(), "f")
+    assert len(fails) == 1 and "schema drift" in fails[0]
+
+
+def test_dense_fused_quotient_gated():
+    base = {"mode": "sce-pipeline", "derived": "x", "rows": [
+        {"stage": "total", "dense_peak_elems": 1000, "fused_peak_elems": 100},
+    ]}
+    cur = {"mode": "sce-pipeline", "derived": "x", "rows": [
+        {"stage": "total", "dense_peak_elems": 1000, "fused_peak_elems": 500},
+    ]}
+    fails = T.compare(cur, base, "f")
+    assert len(fails) == 1 and "fused_over_dense_peak" in fails[0]
+    assert T.compare(base, base, "f") == []
+
+
+def _write(d, name, payload):
+    (d / name).write_text(json.dumps(payload))
+
+
+def test_run_check_end_to_end(tmp_path):
+    cur, base = tmp_path / "cur", tmp_path / "base"
+    cur.mkdir(), base.mkdir()
+    _write(cur, "BENCH_lm_loss.json", _payload())
+    # no baseline yet: pass (reported as note)
+    assert T.run_check(cur, base) == 0
+    # snapshot, then identical: pass
+    assert T.run_check(cur, base, update=True) == 0
+    assert (base / "BENCH_lm_loss.json").exists()
+    assert T.run_check(cur, base) == 0
+    # regression: fail
+    _write(cur, "BENCH_lm_loss.json", _payload(tps_ratio=1.0))
+    assert T.run_check(cur, base) == 1
+    # bench silently dropped from CI: fail
+    (cur / "BENCH_lm_loss.json").unlink()
+    assert T.run_check(cur, base) == 1
+
+
+def test_committed_baselines_parse():
+    """The snapshots under benchmarks/baselines/ must stay loadable and
+    carry gateable metrics for the kernel-bench modes."""
+    import pathlib
+
+    base = pathlib.Path(T.__file__).parent / "baselines"
+    files = sorted(base.glob("BENCH_*.json"))
+    names = {f.name for f in files}
+    assert {"BENCH_lm_loss.json", "BENCH_sce_pipeline.json",
+            "BENCH_eval_pipeline.json"} <= names, names
+    for f in files:
+        payload = json.loads(f.read_text())
+        T.schema_of(payload)  # must not raise
+        if f.name != "BENCH_metric_memory.json":
+            assert T.extract_metrics(payload), f.name

@@ -59,6 +59,13 @@ block verifies the actual Pallas kernel (interpret mode, small shape)
 against the dense oracle, softcap on and off. ``--json`` dumps
 ``BENCH_lm_loss.json`` (CI runs this at smoke scale).
 
+``--mode serve``: the retrieval server (``launch/serve.py``) end to
+end — p50/p99 request latency + QPS per shape bucket through the async
+queue, bucket router and AOT-compiled MIPS catalog sweep, with the
+server's jit cache-miss counter as the ``recompiles`` column (pinned
+to 0 — the bucket router never escapes the static shape set).
+``--json`` emits ``BENCH_serve.json`` (CI runs this at smoke scale).
+
 On TPU, the fused paths' win is structural: the (n_b, C) selection
 scores, (n_b, b_x, b_y) logit tensor and (n_b, b_y, d) gather never
 round-trip HBM.
@@ -506,11 +513,66 @@ def run():
     return run_bucket()
 
 
+def run_serve(buckets=(8, 32), n_requests=64, top_k=10, seed=0):
+    """Serving-path latency/throughput: p50/p99 request latency + QPS
+    per shape bucket, through the REAL async path — bounded queue →
+    bucket router → AOT-compiled MIPS catalog sweep
+    (``launch/serve.py``). One burst of ``bucket`` requests per
+    repetition; the ``recompiles`` column is the server's jit
+    cache-miss counter and must stay 0 across the whole bucket set
+    (the jit-cache-stability guarantee ``tests/test_serve.py`` /
+    ``test_fault_tolerance.py`` pin). Wall times are machine-dependent
+    (ungated); ``recompiles`` is the structural column the trajectory
+    check keys on via the schema pin."""
+    import numpy as np
+
+    from repro.launch.serve import RetrievalServer
+
+    server = RetrievalServer(
+        "sasrec-sce", buckets=buckets, top_k=top_k,
+        queue_size=max(64, 4 * max(buckets)),
+    )
+    rng = np.random.default_rng(seed)
+    hist = rng.integers(
+        1, server.cfg.n_items,
+        size=(max(buckets), server.cfg.max_len),
+    ).astype(np.int32)
+    rows = []
+    for b in server.router.buckets:
+        server.score(hist[:b])  # steady-state: bucket program warm
+        reps = max(1, n_requests // b)
+        lats = []
+        t0 = time.time()
+        for _ in range(reps):
+            reqs = [server.submit(hist[i]) for i in range(b)]
+            for r in reqs:
+                r.result(timeout=600.0)
+            lats.extend(r.latency_ms for r in reqs)
+        wall = time.time() - t0
+        rows.append({
+            "bucket": int(b),
+            "requests": int(b * reps),
+            "p50_ms": float(np.percentile(lats, 50)),
+            "p99_ms": float(np.percentile(lats, 99)),
+            "qps": float(b * reps / wall),
+            "recompiles": int(server.cache_misses),
+        })
+    derived = (
+        f"largest bucket {rows[-1]['bucket']}: "
+        f"p50 {rows[-1]['p50_ms']:.1f} ms, p99 {rows[-1]['p99_ms']:.1f} ms, "
+        f"{rows[-1]['qps']:.0f} qps; {server.compile_count} AOT bucket "
+        f"programs, {server.cache_misses} recompiles across the serve "
+        f"bucket set (target: 0)"
+    )
+    server.close()
+    return rows, derived
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode",
                     choices=("bucket", "sce-pipeline", "eval-pipeline",
-                             "lm-loss"),
+                             "lm-loss", "serve"),
                     default="bucket")
     ap.add_argument("--json", help="write rows + derived summary to PATH")
     ap.add_argument("--catalog", type=int, default=2048,
@@ -521,9 +583,24 @@ def main():
                     help="eval-pipeline streaming tile width")
     ap.add_argument("--d", type=int, default=64,
                     help="lm-loss model width")
+    ap.add_argument("--serve-buckets", default="8,32",
+                    help="serve-mode static batch buckets (comma list)")
+    ap.add_argument("--serve-requests", type=int, default=64,
+                    help="serve-mode requests per bucket sweep")
+    ap.add_argument("--top-k", type=int, default=10,
+                    help="serve-mode retrieval size")
     args = ap.parse_args()
     gradcheck = None
-    if args.mode == "lm-loss":
+    if args.mode == "serve":
+        rows, derived = run_serve(
+            buckets=tuple(int(b) for b in args.serve_buckets.split(",")),
+            n_requests=args.serve_requests, top_k=args.top_k,
+        )
+        print("bucket,requests,p50_ms,p99_ms,qps,recompiles")
+        for r in rows:
+            print(f"{r['bucket']},{r['requests']},{r['p50_ms']:.2f},"
+                  f"{r['p99_ms']:.2f},{r['qps']:.0f},{r['recompiles']}")
+    elif args.mode == "lm-loss":
         rows, derived, gradcheck = run_lm_loss(
             n=args.positions, c=args.catalog, d=args.d,
         )

@@ -46,13 +46,17 @@ _RATIO_METRICS = {
     "tokens_per_s_vs_naive": True,
     "peak_elems_vs_naive": False,
     "flop_ratio_vs_twopass": False,
+    # serve mode: jit cache misses on the request path. Machine
+    # independent (a count, target 0); gated by the zero-baseline rule
+    # in compare() — any recompile showing up in CI is a hard fail.
+    "recompiles": False,
 }
 
 
 def _row_label(row, i):
     if "protocol" in row:
         return f"{row['protocol']}/{row.get('path', '')}/{row.get('stage', '')}"
-    for k in ("loss", "stage", "shape", "metric"):
+    for k in ("loss", "stage", "shape", "metric", "bucket"):
         if k in row:
             return str(row[k])
     return str(i)
@@ -105,6 +109,14 @@ def compare(current: dict, baseline: dict, name: str):
             continue
         cval, _ = cur_m[key]
         if bval == 0:
+            # No percentage drift off a zero baseline — but a
+            # lower-is-better metric that was zero must STAY zero
+            # (e.g. serve-path recompiles).
+            if not hib and cval > 0:
+                fails.append(
+                    f"{name}: {key} grew from a zero baseline "
+                    f"(baseline 0 -> current {cval:.4f})"
+                )
             continue
         change = (cval - bval) / abs(bval)
         bad = -change if hib else change

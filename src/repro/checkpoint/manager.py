@@ -134,3 +134,33 @@ class CheckpointManager:
         if step is None:
             return None, None
         return step, self.restore(step, shardings=shardings)
+
+    def restore_params(
+        self, step: int, *, key: str = "params", shardings: Any = None
+    ) -> Any:
+        """Load ONE top-level subtree of a checkpointed train-state dict
+        — the serving path needs the params but not the optimizer
+        state / PRNG key / data cursor, and the non-param leaves must
+        never be ``device_put`` onto the serving mesh (``shardings``
+        here is a tree for the *subtree* only, e.g.
+        ``dist.sharding.seqrec_serve_shardings``). Falls back to the
+        whole tree when the checkpoint is a bare param tree without a
+        ``key`` entry."""
+        tree = self.restore(step)  # host numpy, no device placement
+        sub = tree[key] if isinstance(tree, dict) and key in tree else tree
+        if shardings is not None:
+            sub = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), sub, shardings
+            )
+        return sub
+
+    def restore_params_latest(
+        self, *, key: str = "params", shardings: Any = None
+    ):
+        """Returns ``(step, params)`` or ``(None, None)`` if no
+        checkpoint — ``restore_latest`` restricted to the param subtree
+        (the retrieval-server load path)."""
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore_params(step, key=key, shardings=shardings)

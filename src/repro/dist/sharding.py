@@ -359,6 +359,16 @@ def seqrec_param_specs(cfg, mesh: Mesh) -> Dict[str, Any]:
     }
 
 
+def seqrec_serve_shardings(cfg, mesh: Mesh) -> Any:
+    """``NamedSharding`` tree for the seqrec serving/restore path: the
+    checkpointed param tree re-sharded straight into the inference
+    layout (catalog rows over ``model``, Megatron layer splits) — what
+    ``CheckpointManager.restore_params_latest`` hands the retrieval
+    server, so a checkpoint written on *any* training mesh restores
+    onto the serving mesh without an intermediate replicated copy."""
+    return named_sharding_tree(mesh, seqrec_param_specs(cfg, mesh))
+
+
 # ---------------------------------------------------------------------------
 # CTR recsys family (structure-driven: tables shard, dense nets replicate)
 # ---------------------------------------------------------------------------

@@ -46,6 +46,7 @@ from repro.eval.streaming import (
     ranks_from_counts,
     streaming_eval_scores,
     streaming_rank_topk,
+    streaming_topk,
 )
 
 __all__ = [
@@ -65,4 +66,5 @@ __all__ = [
     "sasrec_score_fn",
     "streaming_eval_scores",
     "streaming_rank_topk",
+    "streaming_topk",
 ]

@@ -162,6 +162,43 @@ def streaming_rank_topk(
     return vals, ids, gt, eq
 
 
+def streaming_topk(
+    x,
+    y,
+    k: int,
+    *,
+    block_q: int = 128,
+    block_c: int = 512,
+    c_lo: int = 0,
+    c_hi: int | None = None,
+    id_offset=0,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """The inference-side slice of the streaming scorer: per-row top-k
+    over a catalog (shard) under the same ``[c_lo, c_hi)`` global-id
+    window the eval sweep applies — no targets, no rank counts, no
+    ``(B, C)`` score matrix. This is what the retrieval server
+    (``launch/serve.py``) calls per request micro-batch; outputs are
+    bit-identical (ids, values, tie order — lower global id wins) to
+    the dense masked ``lax.top_k`` oracle and to the ``(vals, ids)``
+    pair of :func:`streaming_eval_scores` at the same window.
+
+    ``id_offset`` may be a traced value (``axis_index * c_local`` inside
+    ``shard_map``) — the ``kernels.ops.mips_topk`` wrapper routes that
+    case to the chunked reference scan automatically. Returned ids are
+    global (offset included).
+    """
+    c = y.shape[0]
+    gids = id_offset + jnp.arange(c)
+    hi = (id_offset + c) if c_hi is None else c_hi
+    valid = (gids >= c_lo) & (gids < hi)
+    return ops.mips_topk(
+        x, y, min(k, c),
+        valid=valid, block_q=block_q, block_c=block_c,
+        id_offset=id_offset, interpret=interpret,
+    )
+
+
 def ranks_from_counts(gt, eq):
     """Pessimistic-tie rank from the streamed counts: ``gt`` scores beat
     the target, ``eq`` equal it (including the target's own column) →

@@ -258,9 +258,13 @@ def _seqrec_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
 
     if shape.kind == "serve":
         gb = shape.dims["batch"]
-        fn = steps_lib.make_seqrec_serve_step(arch, cfg, mesh)
+        serve_block_c = 512
+        fn = steps_lib.make_seqrec_mips_serve_step(
+            arch, cfg, mesh, block_c=serve_block_c
+        )
         tokens_abs = _sds((gb, cfg.max_len), jnp.int32)
-        b_local = max(1, gb // dp_size(mesh))
+        tp = mesh.shape.get("model", 1)
+        c_local = max(1, cfg.catalog_loss_size // tp)
         return Cell(
             arch, shape, mesh, fn,
             args=(params_abs, tokens_abs),
@@ -272,8 +276,14 @@ def _seqrec_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
                 _ns(mesh, batch_spec(mesh, 2)),
             ),
             meta={"params": cfg.param_count(), "catalog": cfg.n_items,
-                  # dominant loop: the lax.map over batch score-chunks
-                  "loop_multiplier": -(-b_local // 2048)},
+                  "serve_impl": "mips_topk",
+                  "serve_buckets": sorted(
+                      s.dims["batch"] for s in arch.shapes
+                      if s.kind == "serve"
+                  ),
+                  # dominant loop: the streaming top-k scan over
+                  # local-catalog tiles (no (B, C) score slice)
+                  "loop_multiplier": -(-c_local // serve_block_c)},
         )
 
     # retrieval_cand

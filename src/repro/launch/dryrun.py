@@ -166,6 +166,16 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str) -> dict:
         },
         "collectives": coll,
     }
+    if cell.shape.kind == "serve":
+        # the serving path AOT-compiles ONE program per bucket
+        # (launch/serve.py); record which bucket of that static set this
+        # lowering is, so the dryrun sweep documents the full family the
+        # server holds resident
+        rec["serve"] = {
+            "bucket": cell.shape.dims["batch"],
+            "bucket_family": cell.meta.get("serve_buckets"),
+            "impl": cell.meta.get("serve_impl"),
+        }
     return rec
 
 

@@ -31,8 +31,9 @@ from repro.core.distributed_sce import round_up, sce_loss_sharded
 from repro.core.losses import ce_chunked, make_loss
 from repro.core.sce import SCEConfig, sce_loss
 from repro.dist import shard_map
-from repro.dist.collectives import distributed_topk
+from repro.dist.collectives import distributed_topk, distributed_topk_from_local
 from repro.dist.sharding import batch_spec, catalog_spec, replicated_spec
+from repro.eval.streaming import streaming_topk
 from repro.launch.mesh import dp_size
 from repro.models import bert4rec as b4r_lib
 from repro.models import recsys as recsys_lib
@@ -326,6 +327,67 @@ def make_seqrec_train_step(
         return new_params, new_opt, {"loss": loss}
 
     return train_step, (opt_init, opt_update), sce_cfg
+
+
+def make_seqrec_mips_serve_step(arch, cfg, mesh, *, top_k: int = 10,
+                                block_c: int = 512):
+    """MIPS-backed retrieval serving (the ``launch/serve.py`` step):
+    encode the request batch, then stream the (model-sharded) catalog
+    through the same selection kernel the SCE training step uses
+    (``kernels.ops.mips_topk`` via ``eval.streaming.streaming_topk``) —
+    the inference side never materializes a ``(B, C)`` score matrix,
+    mirroring the training/eval-side peak-memory argument.
+
+    Exactness contract (pinned by the differential tests): ids, values
+    and tie order (lower global id wins) are bit-identical to the dense
+    masked ``lax.top_k`` oracle and to the fused eval scorer's top-k at
+    the same ``[1, n_items)`` window — the padding row 0 and the
+    phantom rows ``>= n_items`` never serve (the eval sweep's
+    ``c_lo=1`` / ``c_hi=n_items`` masking; the superseded dense serve
+    step only masked phantoms). With a mesh, the catalog rides the
+    ``model`` axis and per-shard candidates merge through
+    ``distributed_topk_from_local`` exactly like the sharded eval
+    harness — candidate (value, global-id) pairs cross the wire, never
+    embeddings.
+    """
+    bidirectional = not cfg.causal
+
+    def serve_step(params, tokens):
+        hidden = (
+            b4r_lib.forward(params, cfg, tokens)
+            if bidirectional
+            else sasrec_lib.forward(params, cfg, tokens)
+        )
+        x_last = hidden[:, -1]  # (B, d)
+        y = sasrec_lib.loss_catalog(params, cfg)  # shard-even slice
+
+        if mesh is None:
+            return streaming_topk(
+                x_last, y, top_k,
+                c_lo=1, c_hi=cfg.n_items, block_c=block_c,
+            )
+
+        def inner(x_l, y_l):
+            c_local = y_l.shape[0]
+            off = jax.lax.axis_index("model") * c_local
+            vals_l, gids_l = streaming_topk(
+                x_l, y_l, min(top_k, c_local),
+                c_lo=1, c_hi=cfg.n_items, id_offset=off,
+                block_c=block_c,
+            )
+            return distributed_topk_from_local(
+                vals_l, gids_l, top_k, "model"
+            )
+
+        fn = shard_map(
+            inner,
+            mesh=mesh,
+            in_specs=(batch_spec(mesh, 2), catalog_spec(mesh)),
+            out_specs=(batch_spec(mesh, 2), batch_spec(mesh, 2)),
+        )
+        return fn(x_last, y)
+
+    return serve_step
 
 
 def make_seqrec_serve_step(arch, cfg, mesh, *, top_k: int = 100,

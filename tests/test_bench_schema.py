@@ -1,8 +1,8 @@
-"""Schema smoke tests for the CI benchmark artifacts (ISSUE 4/5
+"""Schema smoke tests for the CI benchmark artifacts (ISSUE 4/5/7
 satellites): run the ``--json`` bench CLIs at smoke scale and assert
 the required keys/types of ``BENCH_metric_memory.json`` /
 ``BENCH_sce_pipeline.json`` / ``BENCH_eval_pipeline.json`` /
-``BENCH_lm_loss.json`` — so
+``BENCH_lm_loss.json`` / ``BENCH_serve.json`` — so
 benchmark refactors can't silently break the perf-trajectory tracking
 the CI artifacts accumulate."""
 import json
@@ -148,6 +148,38 @@ def test_eval_pipeline_json_schema(tmp_path):
         assert ratio <= bound, (protocol, ratio)
         assert fused["hbm_bytes"] < twopass["hbm_bytes"], protocol
         assert fused["peak_elems"] <= twopass["peak_elems"], protocol
+
+
+def test_serve_json_schema(tmp_path):
+    """BENCH_serve.json: per-bucket serving latency rows through the
+    real async queue + AOT bucket programs (ISSUE 7) — p50/p99/QPS
+    typed and ordered sanely, and the ``recompiles`` column (the
+    server's jit cache-miss counter) pinned to ZERO across the whole
+    bucket set: the bucket router never escapes the static shape set."""
+    doc = _run_bench(
+        tmp_path, "benchmarks.kernel_bench",
+        "--mode", "serve", "--serve-buckets", "4,8",
+        "--serve-requests", "16",
+    )
+    assert set(doc) == {"mode", "rows", "derived"}
+    assert doc["mode"] == "serve"
+    assert isinstance(doc["derived"], str) and "recompiles" in doc["derived"]
+    rows = {r["bucket"]: r for r in doc["rows"]}
+    assert set(rows) == {4, 8}
+    spec = {
+        "bucket": numbers.Integral,
+        "requests": numbers.Integral,
+        "p50_ms": numbers.Real,
+        "p99_ms": numbers.Real,
+        "qps": numbers.Real,
+        "recompiles": numbers.Integral,
+    }
+    for b, row in rows.items():
+        _assert_row(row, spec, f"serve[{b}]")
+        assert row["recompiles"] == 0, row
+        assert row["requests"] >= b
+        assert row["p99_ms"] >= row["p50_ms"] > 0
+        assert row["qps"] > 0
 
 
 def test_lm_loss_json_schema(tmp_path):

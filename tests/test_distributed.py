@@ -212,6 +212,88 @@ def test_seqrec_serve_and_retrieval_match_dense():
     """)
 
 
+def test_mips_serve_differential_restored_ckpt_all_meshes():
+    """ISSUE 7 differential: the MIPS-backed serve path on RESTORED
+    checkpoint params — single-device, dp×tp 2×4 and 4×2, plus the full
+    ``RetrievalServer`` on a mesh — is bit-identical (ids, tie order;
+    catalog rows are duplicated so exact ties exist) to the dense
+    masked ``lax.top_k`` oracle and to ``eval/streaming``'s fused
+    scorer at the same ``[1, n_items)`` window."""
+    _run("""
+    import dataclasses, tempfile
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_arch
+    from repro.dist.sharding import seqrec_serve_shardings
+    from repro.eval.streaming import streaming_eval_scores
+    from repro.launch import steps as steps_lib
+    from repro.launch.serve import RetrievalServer
+    from repro.models import sasrec
+
+    arch = get_arch("sasrec-sce")
+    cfg = arch.make_smoke_config()  # the config RetrievalServer serves
+    params = sasrec.init_params(jax.random.PRNGKey(0), cfg)
+    half = cfg.n_items // 2
+    params["item_emb"] = params["item_emb"].at[half:cfg.n_items].set(
+        params["item_emb"][:half])  # engineered exact score ties
+    tmp = tempfile.mkdtemp()
+    CheckpointManager(tmp).save(
+        5, {"params": params, "opt_state": {}, "step": np.asarray(5)})
+    mgr = CheckpointManager(tmp)
+    step_h, params_h = mgr.restore_params_latest()
+    assert step_h == 5
+
+    k = 10
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, cfg.max_len),
+                                1, cfg.n_items)
+    # dense masked oracle on the restored params
+    hidden = sasrec.forward(params_h, cfg, tokens)
+    y = sasrec.loss_catalog(params_h, cfg)
+    scores = hidden[:, -1] @ y.T
+    gid = jnp.arange(y.shape[0])
+    scores = jnp.where((gid[None, :] >= 1) & (gid[None, :] < cfg.n_items),
+                       scores, -1e30)
+    want_vals, want_ids = jax.lax.top_k(scores, k)
+    want_ids = np.asarray(want_ids); want_vals = np.asarray(want_vals)
+    assert ((want_ids >= half) & (want_ids < cfg.n_items)).any(), \\
+        "tie construction failed to reach the top-k"
+
+    # eval/streaming's fused scorer at the same window
+    sv, si = streaming_eval_scores(
+        hidden[:, -1], y, jnp.ones((8,), jnp.int32), k,
+        c_lo=1, c_hi=cfg.n_items)[:2]
+    np.testing.assert_array_equal(np.asarray(si), want_ids)
+    np.testing.assert_allclose(np.asarray(sv), want_vals, rtol=1e-6)
+
+    # single-device MIPS serve step
+    v0, i0 = jax.jit(steps_lib.make_seqrec_mips_serve_step(
+        arch, cfg, None, top_k=k))(params_h, tokens)
+    np.testing.assert_array_equal(np.asarray(i0), want_ids)
+    np.testing.assert_allclose(np.asarray(v0), want_vals, rtol=1e-6)
+
+    # sharded: restore WITH serve shardings onto each mesh, then serve
+    for mesh in (mesh24, mesh42):
+        _, params_m = mgr.restore_params_latest(
+            shardings=seqrec_serve_shardings(cfg, mesh))
+        serve = steps_lib.make_seqrec_mips_serve_step(
+            arch, cfg, mesh, top_k=k)
+        with set_mesh(mesh):
+            v, i = jax.jit(serve)(params_m, tokens)
+        np.testing.assert_array_equal(np.asarray(i), want_ids)
+        np.testing.assert_allclose(np.asarray(v), want_vals, rtol=1e-6)
+
+    # the full server on mesh24: checkpoint restore + bucket routing
+    server = RetrievalServer(
+        "sasrec-sce", buckets=(4, 8), top_k=k, mesh=mesh24, ckpt_dir=tmp)
+    assert server.restored_step == 5
+    vals, ids = server.score(np.asarray(tokens, np.int32)[:6])
+    np.testing.assert_array_equal(ids, want_ids[:6])
+    np.testing.assert_allclose(vals, want_vals[:6], rtol=1e-6)
+    assert server.cache_misses == 0
+    server.close()
+    print("mips serve differential ok")
+    """)
+
+
 def test_mini_dryrun_lower_compile_both_meshes():
     """A REAL train cell (reduced widths via smoke config machinery is not
     enough — use bert4rec full config with the small batch shape) must

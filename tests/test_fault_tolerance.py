@@ -64,17 +64,127 @@ def test_straggler_watchdog_reuses_batch(tmp_path, monkeypatch):
     assert out["steps"] == 6 and np.isfinite(out["final_loss"])
 
 
+def _mk_server(**kw):
+    from repro.launch.serve import RetrievalServer
+
+    kw.setdefault("buckets", (2, 4))
+    kw.setdefault("top_k", 5)
+    return RetrievalServer("sasrec-sce", **kw)
+
+
+def _hist(server, n=1, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(
+        1, server.cfg.n_items, size=(n, server.cfg.max_len)
+    ).astype(np.int32)
+
+
 def test_server_fixed_shape_no_recompile():
-    """The serving scorer pads every request batch to one compiled shape."""
-    import numpy as np
-
-    from repro.launch.serve import RecsysServer
-
-    server = RecsysServer("sasrec-sce", batch_size=8, top_k=5)
-    for n in (3, 8, 11):  # under, exact, over the batch
-        hist = np.random.randint(
-            1, server.cfg.n_items, size=(n, server.cfg.max_len)
-        ).astype(np.int32)
-        vals, ids = server.score(hist)
+    """Every arrival size maps onto the static bucket set: across the
+    whole set (under / exact / over each bucket, plus the empty queue)
+    the jit cache-miss counter never moves — only the constructor's
+    one-AOT-program-per-bucket compiles ever happen."""
+    server = _mk_server(buckets=(4, 8), queue_size=64)
+    assert server.compile_count == 2  # one program per bucket, AOT
+    for n in (0, 1, 3, 4, 5, 8, 11, 16, 23):
+        vals, ids = server.score(_hist(server, n, seed=n))
         assert vals.shape == (n, 5) and ids.shape == (n, 5)
-        assert (ids > 0).all()
+        if n:
+            assert (ids > 0).all() and (ids < server.cfg.n_items).all()
+    assert server.cache_misses == 0
+    assert server.compile_count == 2
+    server.close()
+
+
+def test_server_worker_kill_rejects_never_drops():
+    """Kill the serve worker mid-queue: every in-flight request gets the
+    explicit backpressure rejection (``ServerOverloadedError``), none
+    hangs or silently drops — and the worker survives to serve the next
+    submission (per-batch fault isolation = retry-by-resubmit)."""
+    from repro.launch.serve import ServerOverloadedError
+
+    server = _mk_server(queue_size=16)
+    orig_run = server._run
+
+    def boom(bucket, tokens):
+        raise RuntimeError("injected worker kill")
+
+    server._run = boom
+    reqs = [server.submit(h) for h in _hist(server, 6)]
+    for r in reqs:
+        with pytest.raises(ServerOverloadedError, match="not served"):
+            r.result(timeout=60.0)
+    assert server.rejected >= 6
+    # un-kill: the same server serves again (resubmit = retry)
+    server._run = orig_run
+    res = server.submit(_hist(server)[0]).result(timeout=60.0)
+    assert res.ids.shape == (res.k,)
+    assert server.cache_misses == 0
+    server.close()
+
+
+def test_server_stalled_worker_returns_degraded_not_hang():
+    """A stalled worker pushes requests past their deadline: they come
+    back as the degraded-k response (a prefix of the exact top-k) —
+    never a hang, never a drop."""
+    import time as _time
+
+    server = _mk_server(top_k=6, degraded_top_k=2, queue_size=16)
+    orig_run = server._run
+
+    def stalled(bucket, tokens):
+        _time.sleep(0.3)  # injected stall, past the 50 ms deadline
+        return orig_run(bucket, tokens)
+
+    server._run = stalled
+    req = server.submit(_hist(server)[0], deadline_s=0.05)
+    res = req.result(timeout=60.0)
+    assert res.degraded and res.k == 2
+    assert res.ids.shape == (2,) and res.vals.shape == (2,)
+    assert server.degraded_served == 1
+    # degraded answers are the exact top-k prefix, not approximations
+    server._run = orig_run
+    full = server.submit(_hist(server)[0]).result(timeout=60.0)
+    assert not full.degraded
+    np.testing.assert_array_equal(res.ids, full.ids[:2])
+    server.close()
+
+
+def test_server_backpressure_and_close_reject_explicitly():
+    """Bounded queue: submits past capacity raise the backpressure
+    error; close() rejects the still-queued requests explicitly; the
+    in-flight micro-batch completes (served, not dropped)."""
+    import threading
+    import time as _time
+
+    from repro.launch.serve import ServerOverloadedError
+
+    server = _mk_server(buckets=(1,), queue_size=2)
+    orig_run = server._run
+    gate = threading.Event()
+
+    def gated(bucket, tokens):
+        gate.wait(30.0)
+        return orig_run(bucket, tokens)
+
+    server._run = gated
+    in_flight = server.submit(_hist(server)[0])
+    deadline = _time.monotonic() + 10.0
+    while server._queue and _time.monotonic() < deadline:
+        _time.sleep(0.01)  # worker picks the first request up
+    assert not server._queue
+    queued = [server.submit(h) for h in _hist(server, 2, seed=1)]
+    with pytest.raises(ServerOverloadedError, match="queue full"):
+        server.submit(_hist(server)[0])
+    assert server.rejected == 1
+    # close: the two queued-but-unbatched requests are rejected loudly…
+    threading.Thread(target=server.close, daemon=True).start()
+    for q in queued:
+        with pytest.raises(ServerOverloadedError, match="closed"):
+            q.result(timeout=60.0)
+    with pytest.raises(ServerOverloadedError):
+        server.submit(_hist(server)[0])
+    # …while the in-flight batch still completes once the stall lifts.
+    gate.set()
+    res = in_flight.result(timeout=60.0)
+    assert res.ids.shape == (res.k,)

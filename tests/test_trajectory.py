@@ -74,6 +74,42 @@ def test_dense_fused_quotient_gated():
     assert T.compare(base, base, "f") == []
 
 
+def _serve_payload(recompiles=0):
+    return {
+        "mode": "serve",
+        "derived": "x",
+        "rows": [
+            {"bucket": 4, "requests": 16, "p50_ms": 1.0, "p99_ms": 2.0,
+             "qps": 4000.0, "recompiles": recompiles},
+            {"bucket": 8, "requests": 16, "p50_ms": 1.1, "p99_ms": 2.2,
+             "qps": 6000.0, "recompiles": recompiles},
+        ],
+    }
+
+
+def test_serve_recompiles_gated_from_zero_baseline():
+    """Latency/QPS are machine-dependent (never gated), but a recompile
+    appearing on the request path must fail even though % drift off a
+    zero baseline is undefined."""
+    base = _serve_payload(recompiles=0)
+    assert T.compare(_serve_payload(recompiles=0), base, "f") == []
+    fails = T.compare(_serve_payload(recompiles=2), base, "f")
+    assert len(fails) == 2  # one per bucket row
+    assert all("recompiles" in f and "zero baseline" in f for f in fails)
+    # rows are labelled by bucket, so the failure names the culprit
+    assert any("8.recompiles" in f for f in fails)
+
+
+def test_serve_latency_is_not_gated():
+    """10x slower p50/p99/qps (a slower CI runner) must NOT fail."""
+    cur = _serve_payload()
+    for row in cur["rows"]:
+        row["p50_ms"] *= 10
+        row["p99_ms"] *= 10
+        row["qps"] /= 10
+    assert T.compare(cur, _serve_payload(), "f") == []
+
+
 def _write(d, name, payload):
     (d / name).write_text(json.dumps(payload))
 
@@ -105,7 +141,7 @@ def test_committed_baselines_parse():
     files = sorted(base.glob("BENCH_*.json"))
     names = {f.name for f in files}
     assert {"BENCH_lm_loss.json", "BENCH_sce_pipeline.json",
-            "BENCH_eval_pipeline.json"} <= names, names
+            "BENCH_eval_pipeline.json", "BENCH_serve.json"} <= names, names
     for f in files:
         payload = json.loads(f.read_text())
         T.schema_of(payload)  # must not raise

@@ -66,6 +66,14 @@ server's jit cache-miss counter as the ``recompiles`` column (pinned
 to 0 — the bucket router never escapes the static shape set).
 ``--json`` emits ``BENCH_serve.json`` (CI runs this at smoke scale).
 
+``--mode ckpt``: the fault-tolerance substrate (``repro.checkpoint``)
+— blocking vs async save (the async row times only the stall the train
+loop pays), verified restore, and the corrupt-latest fallback restore,
+with the manager's ``unverified_loads`` counter as the structural
+column (pinned to 0 — the fallback ladder never loads bytes that
+failed manifest verification). ``--json`` emits ``BENCH_ckpt.json``
+(CI runs this at smoke scale).
+
 On TPU, the fused paths' win is structural: the (n_b, C) selection
 scores, (n_b, b_x, b_y) logit tensor and (n_b, b_y, d) gather never
 round-trip HBM.
@@ -75,6 +83,7 @@ from __future__ import annotations
 import argparse
 import functools
 import json
+import os
 import time
 
 import jax
@@ -568,11 +577,103 @@ def run_serve(buckets=(8, 32), n_requests=64, top_k=10, seed=0):
     return rows, derived
 
 
+def run_ckpt(elems=1 << 20, reps=3):
+    """Checkpoint-path costs through the REAL CheckpointManager
+    (``repro.checkpoint``): blocking save, the async-save stall the
+    train loop actually pays (host snapshot only), the full background
+    write, verified restore, and the corrupt-latest fallback restore.
+
+    Wall times are machine-dependent (ungated); the structural column
+    is ``unverified_loads`` on the restore rows — the fallback ladder
+    must never load bytes that failed manifest verification, and the
+    trajectory check's zero-baseline rule fails CI if it ever does.
+    """
+    import shutil
+    import tempfile
+
+    import numpy as np
+
+    from repro.checkpoint import CheckpointManager
+
+    rng = np.random.default_rng(0)
+    n_leaves = 8
+    tree = {
+        f"w{i}": rng.normal(size=elems // n_leaves).astype(np.float32)
+        for i in range(n_leaves)
+    }
+    rows = []
+    tmp = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        mgr = CheckpointManager(tmp, keep_n=0)
+
+        def _ms(f):
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.time()
+                f()
+                best = min(best, time.time() - t0)
+            return best * 1e3
+
+        save_blocking = _ms(lambda: mgr.save(0, tree, blocking=True))
+        rows.append({"stage": "save_blocking", "elems": int(elems),
+                     "wall_ms": save_blocking})
+
+        # The async stall: what the step loop blocks on (device_get +
+        # host snapshot); the write itself overlaps the next steps.
+        stall = _ms(lambda: mgr.save(1, tree, blocking=False))
+        mgr.wait()
+        rows.append({"stage": "save_async_stall", "elems": int(elems),
+                     "wall_ms": stall})
+
+        def _async_total():
+            mgr.save(2, tree, blocking=False)
+            mgr.wait()
+
+        rows.append({"stage": "save_async_total", "elems": int(elems),
+                     "wall_ms": _ms(_async_total)})
+
+        restore_ms = _ms(lambda: mgr.restore_latest())
+        rows.append({"stage": "restore_verify", "elems": int(elems),
+                     "wall_ms": restore_ms,
+                     "unverified_loads": int(mgr.unverified_loads)})
+
+        # Corrupt the newest step (truncate the payload), then time the
+        # fallback ladder skipping it for the previous intact one.
+        latest = mgr.latest_step()
+        leaves = os.path.join(tmp, f"step_{latest}", "leaves.npz")
+        with open(leaves, "r+b") as f:
+            f.truncate(os.path.getsize(leaves) // 2)
+        t0 = time.time()
+        step, restored = mgr.restore_latest()
+        fallback_ms = (time.time() - t0) * 1e3
+        assert step is not None and step < latest, (
+            f"fallback returned step {step}, corrupt latest was {latest}"
+        )
+        assert restored is not None
+        rows.append({"stage": "restore_fallback", "elems": int(elems),
+                     "wall_ms": fallback_ms,
+                     "unverified_loads": int(mgr.unverified_loads)})
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    mib = elems * 4 / 2**20
+    derived = (
+        f"{mib:.0f} MiB state: async stall {rows[1]['wall_ms']:.1f} ms vs "
+        f"{rows[0]['wall_ms']:.1f} ms blocking "
+        f"({rows[0]['wall_ms'] / max(rows[1]['wall_ms'], 1e-9):.1f}x "
+        f"hidden from the step loop); verified restore "
+        f"{rows[3]['wall_ms']:.1f} ms, corrupt-latest fallback "
+        f"{rows[4]['wall_ms']:.1f} ms; unverified_loads="
+        f"{rows[4]['unverified_loads']} (target: 0 — the restore path "
+        f"never returns bytes that failed manifest verification)"
+    )
+    return rows, derived
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode",
                     choices=("bucket", "sce-pipeline", "eval-pipeline",
-                             "lm-loss", "serve"),
+                             "lm-loss", "serve", "ckpt"),
                     default="bucket")
     ap.add_argument("--json", help="write rows + derived summary to PATH")
     ap.add_argument("--catalog", type=int, default=2048,
@@ -589,9 +690,17 @@ def main():
                     help="serve-mode requests per bucket sweep")
     ap.add_argument("--top-k", type=int, default=10,
                     help="serve-mode retrieval size")
+    ap.add_argument("--ckpt-elems", type=int, default=1 << 20,
+                    help="ckpt-mode train-state size in f32 elements")
     args = ap.parse_args()
     gradcheck = None
-    if args.mode == "serve":
+    if args.mode == "ckpt":
+        rows, derived = run_ckpt(elems=args.ckpt_elems)
+        print("stage,elems,wall_ms,unverified_loads")
+        for r in rows:
+            print(f"{r['stage']},{r['elems']},{r['wall_ms']:.2f},"
+                  f"{r.get('unverified_loads', '-')}")
+    elif args.mode == "serve":
         rows, derived = run_serve(
             buckets=tuple(int(b) for b in args.serve_buckets.split(",")),
             n_requests=args.serve_requests, top_k=args.top_k,

@@ -50,6 +50,11 @@ _RATIO_METRICS = {
     # independent (a count, target 0); gated by the zero-baseline rule
     # in compare() — any recompile showing up in CI is a hard fail.
     "recompiles": False,
+    # ckpt mode: restores that bypassed manifest verification. The
+    # fallback ladder must NEVER load unverified bytes — zero-baseline
+    # gated, so a regression that sneaks a verify=False load into the
+    # restore path fails CI structurally, not statistically.
+    "unverified_loads": False,
 }
 
 

@@ -1,3 +1,6 @@
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import (
+    CheckpointCorruptError,
+    CheckpointManager,
+)
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "CheckpointCorruptError"]

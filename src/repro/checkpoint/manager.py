@@ -1,28 +1,57 @@
-"""Fault-tolerant checkpointing (DESIGN.md §4).
+"""Fault-tolerant checkpointing (DESIGN.md §8).
 
 Guarantees:
   * **atomicity** — state is written to ``step_N.tmp`` and ``os.rename``d
     to ``step_N`` only when complete; a crash mid-write never corrupts the
     latest valid checkpoint, and ``restore_latest`` skips stray ``.tmp``
     dirs from a previous crash.
-  * **keep-N** — older checkpoints are pruned after each successful save.
+  * **integrity** — every checkpoint carries a ``manifest.json`` (leaf
+    count + per-file byte size + CRC32, written *before* the atomic
+    rename). ``restore`` verifies the manifest by default; a truncated
+    ``leaves.npz``, a flipped manifest byte, or a missing file raises
+    :class:`CheckpointCorruptError` instead of unpickling garbage.
+  * **fallback ladder** — ``restore_latest`` walks steps newest→oldest
+    and returns the newest checkpoint that *passes verification*,
+    warning about (and skipping) corrupt ones. It never crashes on a bad
+    checkpoint and never returns unverified bytes; ``(None, None)`` only
+    when *no* intact checkpoint exists.
+  * **keep-N** — older checkpoints are pruned after each successful
+    save; the step just written is never pruned, even when ``keep_n``
+    shrank across a restart.
   * **async** — ``save(..., blocking=False)`` snapshots to host
-    (``jax.device_get``, cheap) and writes on a daemon thread so the train
-    loop never stalls on filesystem I/O; ``wait()`` joins before exit.
+    (``jax.device_get``, cheap) and writes on a daemon thread so the
+    train loop never stalls on filesystem I/O; ``wait()`` joins before
+    exit. A ``kill -9`` mid-write leaves only an ignored ``.tmp`` dir
+    that the next save of the same step overwrites.
+  * **save policy** — ``should_save(step)`` combines a step interval
+    (``save_every_steps``) with a wall-clock interval
+    (``save_interval_seconds``, Levanter-style): long-running jobs
+    checkpoint on time even when steps are slow, and on steps even when
+    they are fast.
   * **elastic** — arrays are stored as full (host-gathered) numpy, so a
     job restarted on a *different* mesh/device count re-shards on load:
     pass ``shardings`` (a NamedSharding tree) to ``restore``.
 
 Format: one ``.npz`` holding all leaves keyed by tree path + a pickled
-treedef. Pure numpy/pickle — no orbax dependency in this container.
+treedef + ``manifest.json``. Pure numpy/pickle — no orbax dependency in
+this container.
+
+Test hook: the ``REPRO_CKPT_WRITE_DELAY_S`` env var sleeps that many
+seconds after the files are written but *before* the atomic rename —
+the preemption drill uses it to land a ``kill -9`` mid-async-write
+deterministically.
 """
 from __future__ import annotations
 
+import json
 import os
 import pickle
 import re
 import shutil
+import sys
 import threading
+import time
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -30,32 +59,104 @@ import numpy as np
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
+MANIFEST_NAME = "manifest.json"
+MANIFEST_FORMAT = 1
+_CKPT_FILES = ("leaves.npz", "treedef.pkl")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed manifest verification (missing / truncated /
+    bit-flipped files). ``restore_latest`` catches this and falls back;
+    a direct ``restore(step)`` surfaces it."""
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
 
 
+def _crc32_file(path: str, chunk: int = 1 << 20) -> str:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(chunk)
+            if not block:
+                break
+            crc = zlib.crc32(block, crc)
+    return f"{crc & 0xFFFFFFFF:08x}"
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # platforms without dir fds
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _warn(msg: str) -> None:
+    print(f"[ckpt] WARNING: {msg}", file=sys.stderr)
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, *, keep_n: int = 3):
+    def __init__(
+        self,
+        directory: str,
+        *,
+        keep_n: int = 3,
+        save_every_steps: Optional[int] = None,
+        save_interval_seconds: Optional[float] = None,
+        _clock=time.monotonic,
+    ):
         self.directory = directory
         self.keep_n = keep_n
+        self.save_every_steps = save_every_steps
+        self.save_interval_seconds = save_interval_seconds
         os.makedirs(directory, exist_ok=True)
+        self._clock = _clock
+        self._last_save_t = _clock()
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        # Counts restores that bypassed manifest verification
+        # (``restore(..., verify=False)``). The production paths —
+        # ``restore_latest`` / ``restore_params_latest`` / the train
+        # driver — must keep this at 0; BENCH_ckpt.json pins it.
+        self.unverified_loads = 0
+
+    # -- save policy -------------------------------------------------------
+    def should_save(self, step: int) -> bool:
+        """Combined step- + time-based policy: due when ``step + 1`` hits
+        ``save_every_steps`` OR ``save_interval_seconds`` of wall clock
+        passed since the last save (whichever fires first). With neither
+        configured, never due (callers then decide themselves)."""
+        if (
+            self.save_every_steps
+            and (step + 1) % self.save_every_steps == 0
+        ):
+            return True
+        return (
+            self.save_interval_seconds is not None
+            and self._clock() - self._last_save_t
+            >= self.save_interval_seconds
+        )
 
     # -- write -------------------------------------------------------------
     def save(self, step: int, tree: Any, *, blocking: bool = True) -> None:
         """Checkpoint ``tree`` at ``step``. Non-blocking saves snapshot to
-        host immediately and write on a background thread."""
+        host immediately and write on a background thread — the caller
+        only pays for the ``device_get``."""
         self.wait()  # one writer at a time; surfaces prior errors
-        host_leaves = [np.asarray(jax.device_get(x)) for x in _flatten(tree)[0]]
-        treedef = _flatten(tree)[1]
+        leaves, treedef = _flatten(tree)
+        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+        self._last_save_t = self._clock()
 
         def write():
             tmp = os.path.join(self.directory, f"step_{step}.tmp")
             final = os.path.join(self.directory, f"step_{step}")
-            if os.path.exists(tmp):
+            if os.path.exists(tmp):  # stray dir from a crashed writer
                 shutil.rmtree(tmp)
             os.makedirs(tmp)
             np.savez(
@@ -64,10 +165,35 @@ class CheckpointManager:
             )
             with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
                 pickle.dump(treedef, f)
+            # Manifest LAST, before the rename: its checksums cover the
+            # payload files, so any later truncation/bit-rot (or a torn
+            # copy of the directory) is detected at restore time.
+            manifest = {
+                "format": MANIFEST_FORMAT,
+                "step": int(step),
+                "n_leaves": len(host_leaves),
+                "files": {},
+            }
+            for name in _CKPT_FILES:
+                p = os.path.join(tmp, name)
+                manifest["files"][name] = {
+                    "bytes": os.path.getsize(p),
+                    "crc32": _crc32_file(p),
+                }
+            man_path = os.path.join(tmp, MANIFEST_NAME)
+            with open(man_path, "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            _fsync_dir(tmp)
+            delay = os.environ.get("REPRO_CKPT_WRITE_DELAY_S")
+            if delay:  # drill hook: widen the mid-write kill window
+                time.sleep(float(delay))
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)  # the atomic commit point
-            self._prune()
+            _fsync_dir(self.directory)
+            self._prune(protect=step)
 
         if blocking:
             write()
@@ -92,18 +218,32 @@ class CheckpointManager:
             err, self._error = self._error, None
             raise err
 
-    def _prune(self) -> None:
+    def _prune(self, *, protect: Optional[int] = None) -> None:
+        """Remove all but the newest ``keep_n`` steps. ``protect`` (the
+        step just written) survives unconditionally — ``keep_n`` may
+        have shrunk across a restart, and prune must never delete the
+        checkpoint the caller is counting on."""
         steps = sorted(self.all_steps())
         for s in steps[: -self.keep_n] if self.keep_n else []:
+            if s == protect:
+                continue
             shutil.rmtree(os.path.join(self.directory, f"step_{s}"))
 
     # -- read --------------------------------------------------------------
     def all_steps(self):
+        """Steps whose directories hold every checkpoint file (payloads
+        + manifest). Dirs missing any of them — a torn copy, a partial
+        delete, a stray ``.tmp`` — are skipped, not reported; full
+        checksum verification happens at restore time."""
         out = []
         for name in os.listdir(self.directory):
             m = _STEP_RE.match(name)
-            if m and os.path.exists(
-                os.path.join(self.directory, name, "treedef.pkl")
+            if not m:
+                continue
+            d = os.path.join(self.directory, name)
+            if all(
+                os.path.isfile(os.path.join(d, f))
+                for f in _CKPT_FILES + (MANIFEST_NAME,)
             ):
                 out.append(int(m.group(1)))
         return sorted(out)
@@ -112,15 +252,76 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int, *, shardings: Any = None) -> Any:
-        """Load the checkpoint at ``step``. ``shardings`` (optional tree of
-        ``jax.sharding.Sharding``) re-shards every leaf onto the *current*
-        mesh — the elastic-restart path."""
+    def verify(self, step: int) -> dict:
+        """Check the manifest of ``step``: parseable, right step, files
+        present with matching sizes and CRC32s. Returns the manifest;
+        raises :class:`CheckpointCorruptError` with the reason."""
         path = os.path.join(self.directory, f"step_{step}")
-        with open(os.path.join(path, "treedef.pkl"), "rb") as f:
-            treedef = pickle.load(f)
-        with np.load(os.path.join(path, "leaves.npz")) as z:
-            leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+
+        def bad(reason):
+            raise CheckpointCorruptError(f"step {step}: {reason}")
+
+        man_path = os.path.join(path, MANIFEST_NAME)
+        if not os.path.isfile(man_path):
+            bad("missing manifest.json")
+        try:
+            with open(man_path) as f:
+                manifest = json.load(f)
+        except (json.JSONDecodeError, OSError, UnicodeDecodeError) as e:
+            bad(f"unreadable manifest ({e})")
+        if manifest.get("format") != MANIFEST_FORMAT:
+            bad(f"unknown manifest format {manifest.get('format')!r}")
+        if manifest.get("step") != step:
+            bad(f"manifest claims step {manifest.get('step')!r}")
+        files = manifest.get("files")
+        if not isinstance(files, dict) or set(files) != set(_CKPT_FILES):
+            bad(f"manifest file list {sorted(files or ())} != "
+                f"{sorted(_CKPT_FILES)}")
+        for name, meta in files.items():
+            p = os.path.join(path, name)
+            if not os.path.isfile(p):
+                bad(f"missing {name}")
+            size = os.path.getsize(p)
+            if size != meta.get("bytes"):
+                bad(f"{name}: {size} bytes, manifest says "
+                    f"{meta.get('bytes')}")
+            crc = _crc32_file(p)
+            if crc != meta.get("crc32"):
+                bad(f"{name}: crc32 {crc} != manifest {meta.get('crc32')}")
+        return manifest
+
+    def restore(
+        self, step: int, *, shardings: Any = None, verify: bool = True
+    ) -> Any:
+        """Load the checkpoint at ``step``. ``shardings`` (optional tree
+        of ``jax.sharding.Sharding``) re-shards every leaf onto the
+        *current* mesh — the elastic-restart path. Verification is on by
+        default; ``verify=False`` is for debugging only and is counted
+        in ``unverified_loads``."""
+        if verify:
+            manifest = self.verify(step)
+        else:
+            manifest = None
+            self.unverified_loads += 1
+        path = os.path.join(self.directory, f"step_{step}")
+        try:
+            with open(os.path.join(path, "treedef.pkl"), "rb") as f:
+                treedef = pickle.load(f)
+            with np.load(os.path.join(path, "leaves.npz")) as z:
+                leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+        except CheckpointCorruptError:
+            raise
+        except Exception as e:
+            # Checksums passed but decode failed (or verify was off):
+            # surface as corruption so the fallback ladder can act.
+            raise CheckpointCorruptError(
+                f"step {step}: undecodable payload ({e})"
+            ) from e
+        if manifest is not None and len(leaves) != manifest["n_leaves"]:
+            raise CheckpointCorruptError(
+                f"step {step}: {len(leaves)} leaves, manifest says "
+                f"{manifest['n_leaves']}"
+            )
         tree = jax.tree_util.tree_unflatten(treedef, leaves)
         if shardings is not None:
             tree = jax.tree.map(
@@ -129,14 +330,20 @@ class CheckpointManager:
         return tree
 
     def restore_latest(self, *, shardings: Any = None):
-        """Returns ``(step, tree)`` or ``(None, None)`` if no checkpoint."""
-        step = self.latest_step()
-        if step is None:
-            return None, None
-        return step, self.restore(step, shardings=shardings)
+        """``(step, tree)`` for the NEWEST checkpoint that passes
+        verification — the fallback ladder. Corrupt or torn steps are
+        warned about and skipped, never loaded; ``(None, None)`` when no
+        step survives."""
+        for step in reversed(self.all_steps()):
+            try:
+                return step, self.restore(step, shardings=shardings)
+            except CheckpointCorruptError as e:
+                _warn(f"{e} — falling back to the previous step")
+        return None, None
 
     def restore_params(
-        self, step: int, *, key: str = "params", shardings: Any = None
+        self, step: int, *, key: str = "params", shardings: Any = None,
+        verify: bool = True,
     ) -> Any:
         """Load ONE top-level subtree of a checkpointed train-state dict
         — the serving path needs the params but not the optimizer
@@ -146,7 +353,7 @@ class CheckpointManager:
         ``dist.sharding.seqrec_serve_shardings``). Falls back to the
         whole tree when the checkpoint is a bare param tree without a
         ``key`` entry."""
-        tree = self.restore(step)  # host numpy, no device placement
+        tree = self.restore(step, verify=verify)  # host numpy, no placement
         sub = tree[key] if isinstance(tree, dict) and key in tree else tree
         if shardings is not None:
             sub = jax.tree.map(
@@ -157,10 +364,14 @@ class CheckpointManager:
     def restore_params_latest(
         self, *, key: str = "params", shardings: Any = None
     ):
-        """Returns ``(step, params)`` or ``(None, None)`` if no
-        checkpoint — ``restore_latest`` restricted to the param subtree
-        (the retrieval-server load path)."""
-        step = self.latest_step()
-        if step is None:
-            return None, None
-        return step, self.restore_params(step, key=key, shardings=shardings)
+        """Returns ``(step, params)`` or ``(None, None)`` if no intact
+        checkpoint — ``restore_latest``'s fallback ladder restricted to
+        the param subtree (the retrieval-server load path)."""
+        for step in reversed(self.all_steps()):
+            try:
+                return step, self.restore_params(
+                    step, key=key, shardings=shardings
+                )
+            except CheckpointCorruptError as e:
+                _warn(f"{e} — falling back to the previous step")
+        return None, None

@@ -1,6 +1,6 @@
 """Data substrate: synthetic-but-learnable generators for every model
 family, all driven by a deterministic, checkpointable cursor."""
-from repro.data.pipeline import Cursor
+from repro.data.pipeline import Cursor, ShardedCursor, shard_batch
 from repro.data.sequences import SeqDataConfig, SequenceDataset
 from repro.data.clickstream import ClickDataConfig, ClickstreamDataset
 from repro.data.graphs import (
@@ -12,6 +12,8 @@ from repro.data.graphs import (
 
 __all__ = [
     "Cursor",
+    "ShardedCursor",
+    "shard_batch",
     "SeqDataConfig",
     "SequenceDataset",
     "ClickDataConfig",

@@ -13,7 +13,7 @@ from typing import Dict, Tuple
 
 import numpy as np
 
-from repro.data.pipeline import Cursor
+from repro.data.pipeline import Cursor, ShardedCursor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,3 +81,14 @@ class ClickstreamDataset:
 
         batch = {"dense": dense, "sparse_ids": sparse, "labels": labels}
         return batch, cursor.advance()
+
+    def next_batch_sharded(
+        self, scursor: ShardedCursor
+    ) -> Tuple[Dict[str, np.ndarray], ShardedCursor]:
+        """Host-local rows of the GLOBAL clickstream batch at
+        ``scursor`` — same generate-global-slice-local contract as
+        ``SequenceDataset.next_batch_sharded`` (the teacher-labelled
+        draws are batch-shaped), so resharding never changes the global
+        stream."""
+        batch, _ = self.next_batch(scursor.cursor)
+        return scursor.shard(batch), scursor.advance()

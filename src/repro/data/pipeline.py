@@ -1,14 +1,25 @@
-"""Checkpointable data cursor.
+"""Checkpointable data cursor + per-host sharding.
 
 Every dataset in this package is a pure function ``batch = f(seed, step)``
 — no hidden iterator state. The :class:`Cursor` (seed, step) is therefore
 the *entire* pipeline state: store it in the checkpoint, restore it on a
 different host count, and the token stream continues exactly where it
-left off (DESIGN.md §4, fault tolerance).
+left off (DESIGN.md §8, fault tolerance).
+
+:class:`ShardedCursor` layers a ``(host_id, n_hosts)`` view on top: host
+``h`` of ``H`` owns the ``h``-th contiguous block of the *global* batch's
+rows at every step. Because the global batch is a pure function of
+``(seed, step)`` and the per-host slice is a pure function of the global
+batch, the **global token stream is bit-identical under resharding**: a
+job checkpointed on ``H`` hosts and restored on ``H′`` re-partitions the
+same rows in the same global order — the checkpoint stores only the
+underlying ``(seed, step)``, never the host topology
+(``tests/test_elastic.py`` property-tests the invariant).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict
 
 import numpy as np
 
@@ -49,3 +60,85 @@ class Cursor:
     @staticmethod
     def from_state(state: dict) -> "Cursor":
         return Cursor(seed=int(state["seed"]), step=int(state["step"]))
+
+
+def shard_batch(batch: Dict[str, np.ndarray], host_id: int,
+                n_hosts: int) -> Dict[str, np.ndarray]:
+    """Host ``host_id``'s contiguous row-block of a global batch dict.
+
+    Every array leaf is sliced on axis 0 (the batch axis — matching
+    ``dist.sharding.batch_spec``'s leading-dim convention), so
+    ``concat_h(shard_batch(b, h, H)) == b`` for any ``H`` dividing the
+    row count. Non-divisible batches are an error, not a silent drop:
+    resharding must never change the global stream."""
+    if not 0 <= host_id < n_hosts:
+        raise ValueError(f"host_id {host_id} not in [0, {n_hosts})")
+    out = {}
+    for k, v in batch.items():
+        rows = v.shape[0]
+        if rows % n_hosts:
+            raise ValueError(
+                f"batch leaf {k!r} has {rows} rows, not divisible by "
+                f"n_hosts={n_hosts}"
+            )
+        per = rows // n_hosts
+        out[k] = v[host_id * per:(host_id + 1) * per]
+    return out
+
+
+@dataclasses.dataclass
+class ShardedCursor:
+    """Host-local view of the global :class:`Cursor` stream.
+
+    The *state* is the underlying ``(seed, step)`` only — ``to_state``
+    deliberately records ``host_id``/``n_hosts`` as information, and
+    ``from_state`` takes the CURRENT topology as arguments, ignoring the
+    recorded one. That asymmetry is the resharding contract: restore a
+    checkpoint written on H hosts with ``from_state(state, host_id=h,
+    n_hosts=H')`` and every host's slice re-partitions the identical
+    global stream.
+    """
+
+    cursor: Cursor
+    host_id: int = 0
+    n_hosts: int = 1
+
+    def __post_init__(self):
+        if self.n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1, got {self.n_hosts}")
+        if not 0 <= self.host_id < self.n_hosts:
+            raise ValueError(
+                f"host_id {self.host_id} not in [0, {self.n_hosts})"
+            )
+
+    def advance(self, n: int = 1) -> "ShardedCursor":
+        return dataclasses.replace(self, cursor=self.cursor.advance(n))
+
+    def split(self, name: str) -> "ShardedCursor":
+        return dataclasses.replace(self, cursor=self.cursor.split(name))
+
+    def resharded(self, host_id: int, n_hosts: int) -> "ShardedCursor":
+        """The same global stream position under a new host topology."""
+        return ShardedCursor(self.cursor, host_id=host_id, n_hosts=n_hosts)
+
+    def shard(self, batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """This host's rows of a batch generated from ``self.cursor``."""
+        return shard_batch(batch, self.host_id, self.n_hosts)
+
+    def to_state(self) -> dict:
+        return {
+            "seed": self.cursor.seed,
+            "step": self.cursor.step,
+            "host_id": self.host_id,
+            "n_hosts": self.n_hosts,
+        }
+
+    @staticmethod
+    def from_state(
+        state: dict, *, host_id: int = 0, n_hosts: int = 1
+    ) -> "ShardedCursor":
+        """Restore onto the CURRENT topology (which may differ from the
+        one recorded at save time — that's the elastic path)."""
+        return ShardedCursor(
+            Cursor.from_state(state), host_id=host_id, n_hosts=n_hosts
+        )

@@ -18,7 +18,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.data.pipeline import Cursor
+from repro.data.pipeline import Cursor, ShardedCursor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +98,23 @@ class SequenceDataset:
             "valid": valid,
         }
         return batch, cursor.advance()
+
+    def next_batch_sharded(
+        self, scursor: ShardedCursor
+    ) -> Tuple[Dict[str, np.ndarray], ShardedCursor]:
+        """Host-local rows of the GLOBAL batch at ``scursor``.
+
+        The full global batch is generated (the vectorized Markov/Zipf
+        draws are batch-shaped, so row ``i``'s tokens depend on the
+        whole-batch draw order) and this host's contiguous row block is
+        sliced out — which is exactly what makes the global stream
+        bit-identical under resharding. The synthetic generator is
+        cheap enough that the (global_batch × L) working set is noise;
+        a real ingestion pipeline would key its RNG per row to generate
+        only the local slice.
+        """
+        batch, _ = self.next_batch(scursor.cursor)
+        return scursor.shard(batch), scursor.advance()
 
     def eval_batch(self, cursor: Cursor) -> Tuple[Dict[str, np.ndarray], Cursor]:
         """Held-out batch: same generator, disjoint split → unseen users

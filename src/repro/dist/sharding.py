@@ -122,6 +122,33 @@ def batch_spec(mesh: Mesh, ndim: int = 1, *, batch_dim: int = 0) -> P:
     return P(*dims)
 
 
+def host_batch_slice(global_rows: int, host_id: int, n_hosts: int) -> slice:
+    """Axis-0 slice of the GLOBAL batch owned by ``host_id``.
+
+    The multi-host input-pipeline contract (DESIGN.md §8): each host
+    feeds ``jax.make_array_from_process_local_data`` exactly the
+    contiguous row block ``[host_id·per, (host_id+1)·per)`` of the
+    deterministic global batch, ``per = global_rows / n_hosts``. This is
+    the same slicing :class:`repro.data.ShardedCursor.shard` performs
+    (``tests/test_dist_sharding.py`` pins the two equivalent, so the
+    data layer — numpy-pure, no jax import — and the device-placement
+    layer can never disagree about which rows a host owns).
+
+    Raises ``ValueError`` when ``global_rows`` is not divisible by
+    ``n_hosts`` (elastic restarts must pick host counts that divide the
+    global batch) or ``host_id`` is out of range.
+    """
+    if not 0 <= host_id < n_hosts:
+        raise ValueError(f"host_id {host_id} not in [0, {n_hosts})")
+    if global_rows % n_hosts:
+        raise ValueError(
+            f"global batch rows {global_rows} not divisible by "
+            f"n_hosts {n_hosts}"
+        )
+    per = global_rows // n_hosts
+    return slice(host_id * per, (host_id + 1) * per)
+
+
 def catalog_spec(mesh: Mesh, ndim: int = 2) -> P:
     """Vocab-parallel catalog layout.
 

@@ -78,6 +78,17 @@ def _ns(mesh, spec_tree):
     return named_sharding_tree(mesh, spec_tree)
 
 
+def _metrics_shardings(mesh):
+    # Train steps return the guarded-update metrics dict
+    # (launch/steps.py::_apply_update_guarded): per-step loss, the
+    # on-device skip flag, and the global grad norm — all scalars.
+    return {
+        "loss": replicated_sharding(mesh),
+        "skipped": replicated_sharding(mesh),
+        "grad_norm": replicated_sharding(mesh),
+    }
+
+
 def _abs_params(init_fn):
     return jax.eval_shape(init_fn, _key_abs())
 
@@ -137,7 +148,7 @@ def _lm_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
             ),
             out_shardings=(
                 _ns(mesh, p_specs), _ns(mesh, o_specs),
-                {"loss": replicated_sharding(mesh)},
+                _metrics_shardings(mesh),
             ),
             donate_argnums=(0, 1),
             meta={
@@ -242,7 +253,7 @@ def _seqrec_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
             ),
             out_shardings=(
                 _ns(mesh, p_specs), _ns(mesh, o_specs),
-                {"loss": replicated_sharding(mesh)},
+                _metrics_shardings(mesh),
             ),
             donate_argnums=(0, 1),
             meta={
@@ -352,7 +363,7 @@ def _recsys_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
             ),
             out_shardings=(
                 _ns(mesh, p_specs), _ns(mesh, o_specs),
-                {"loss": replicated_sharding(mesh)},
+                _metrics_shardings(mesh),
             ),
             donate_argnums=(0, 1),
             meta={
@@ -496,7 +507,7 @@ def _gnn_cell(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, **opts) -> Cell:
         ),
         out_shardings=(
             _ns(mesh, p_specs), _ns(mesh, o_specs),
-            {"loss": replicated_sharding(mesh)},
+            _metrics_shardings(mesh),
         ),
         donate_argnums=(0, 1),
         meta={"params": cfg.param_count(),

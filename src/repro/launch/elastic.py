@@ -1,0 +1,209 @@
+"""Elastic-training substrate: preemption handling, checkpointable train
+state, and the divergence-guard state machine (DESIGN.md §8).
+
+The train driver (``launch/train.py``) was a loop over loose locals;
+everything here exists so that loop can be killed — by the scheduler
+(SIGTERM), by the kernel (``kill -9``), or by its own numerics (NaN /
+exploding loss) — and continue as if nothing happened:
+
+  * :class:`TrainState` — the ONE bundle of mutable training state
+    (params, optimizer state, PRNG key, data cursor, step), with the
+    checkpoint dict format pinned so every historical checkpoint keeps
+    restoring.
+  * :class:`PreemptionHandler` — context manager turning SIGTERM/SIGINT
+    into a polled flag; the loop finishes the in-flight step, takes a
+    final *blocking* save, and exits with :data:`EXIT_PREEMPTED` so the
+    launcher can tell "clean preemption, relaunch me" from a crash.
+  * :class:`DivergenceGuard` — skip/strike/rollback state machine over
+    the per-step loss. Non-finite losses are skipped *inside* the jitted
+    step (``launch/steps.py`` gates the param update on finiteness);
+    the guard additionally derives a dynamic loss cap (``cap_factor ×``
+    running median) that the step enforces on-device, counts strikes,
+    and after ``max_strikes`` consecutive bad steps tells the driver to
+    roll back to the last verified checkpoint with a reseeded data
+    offset instead of continuing to train on poisoned state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import signal
+import statistics
+import threading
+from collections import deque
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.data import Cursor
+
+# Exit code for "clean preemption: state saved, relaunch to continue" —
+# distinct from 0 (done), 1 (crash), and 128+signum (killed without
+# cleanup). Process supervisors key restart policy on it.
+EXIT_PREEMPTED = 42
+
+
+# ---------------------------------------------------------------------------
+# Checkpointable train state
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TrainState:
+    """Everything the train loop mutates, as one checkpointable unit.
+
+    ``step`` is the index of the last COMPLETED step (−1 before any).
+    The checkpoint dict keys (``params`` / ``opt_state`` / ``key`` /
+    ``cursor`` / ``step``) are a stable format — ``restore_params``
+    and older checkpoints key on them.
+    """
+
+    params: Any
+    opt_state: Any
+    key: jax.Array
+    cursor: Cursor
+    step: int = -1
+
+    def to_ckpt(self, *, n_hosts: int = 1) -> Dict[str, Any]:
+        from repro.data import ShardedCursor
+
+        return {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "key": self.key,
+            # Stored via ShardedCursor so the topology at save time is
+            # recorded; restore ignores it (resharding contract).
+            "cursor": ShardedCursor(
+                self.cursor, host_id=0, n_hosts=n_hosts
+            ).to_state(),
+            "step": self.step,
+        }
+
+    @classmethod
+    def from_ckpt(cls, tree: Dict[str, Any], *, opt_template: Any
+                  ) -> "TrainState":
+        """Rebuild from a restored checkpoint dict. ``opt_template`` is
+        a freshly initialized optimizer state whose *structure* the
+        restored leaves are unflattened onto (NamedTuple classes don't
+        survive pickling as themselves)."""
+        opt_state = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(opt_template),
+            jax.tree_util.tree_leaves(tree["opt_state"]),
+        )
+        return cls(
+            params=tree["params"],
+            opt_state=opt_state,
+            key=tree["key"],
+            cursor=Cursor.from_state(tree["cursor"]),
+            step=int(tree["step"]),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Preemption
+# ---------------------------------------------------------------------------
+class PreemptionHandler:
+    """SIGTERM/SIGINT → a flag the step loop polls.
+
+    Installed only when running on the main thread (signal handlers
+    can't be installed elsewhere — e.g. a train loop driven from a test
+    worker thread just never sees ``preempted``); previous handlers are
+    restored on exit, so nesting and pytest runs stay safe. A second
+    signal during the drain re-raises the default behavior, so a stuck
+    final save can still be interrupted.
+    """
+
+    SIGNALS = (signal.SIGTERM, signal.SIGINT)
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._prev: Dict[int, Any] = {}
+
+    @property
+    def preempted(self) -> bool:
+        return self._event.is_set()
+
+    def _handle(self, signum, frame):
+        if self._event.is_set():  # second signal: stop being graceful
+            prev = self._prev.get(signum, signal.SIG_DFL)
+            signal.signal(signum, prev)
+            signal.raise_signal(signum)
+            return
+        print(f"[preempt] caught signal {signum}: finishing step, "
+              f"saving, exiting {EXIT_PREEMPTED}", flush=True)
+        self._event.set()
+
+    def __enter__(self) -> "PreemptionHandler":
+        if threading.current_thread() is threading.main_thread():
+            for s in self.SIGNALS:
+                self._prev[s] = signal.signal(s, self._handle)
+        return self
+
+    def __exit__(self, *exc):
+        for s, prev in self._prev.items():
+            signal.signal(s, prev)
+        self._prev.clear()
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Divergence guard
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class DivergenceGuard:
+    """Skip / strike / rollback state machine over the per-step loss.
+
+    States (per observed step):
+      * **ok** — finite loss under the cap: strikes reset, loss joins
+        the running-median window.
+      * **strike** — the step was skipped on-device (non-finite loss or
+        gradients, or loss above ``loss_cap()``): params/opt state were
+        NOT updated, strike count += 1.
+      * **rollback** — ``max_strikes`` consecutive strikes: the driver
+        must restore the last verified checkpoint and reseed the data
+        offset (``reseed``) so the stream that poisoned the run is not
+        replayed verbatim.
+
+    ``loss_cap()`` is ``inf`` during the first ``warmup`` healthy steps
+    (no baseline yet), then ``cap_factor ×`` the median of the last
+    ``window`` healthy losses — passed into the jitted step as a device
+    scalar so even *finite* explosions skip the update on-device.
+    """
+
+    max_strikes: int = 3
+    cap_factor: float = 100.0
+    warmup: int = 8
+    window: int = 32
+    # Data-offset stride applied per rollback: the restored cursor is
+    # advanced by rollbacks × this, skipping the stretch of the stream
+    # the divergence happened on (prime, so repeated rollbacks never
+    # re-align with typical eval/ckpt periodicities).
+    reseed_stride: int = 13
+
+    strikes: int = 0
+    rollbacks: int = 0
+
+    def __post_init__(self):
+        self._recent: deque = deque(maxlen=self.window)
+
+    def loss_cap(self) -> float:
+        if len(self._recent) < self.warmup:
+            return math.inf
+        return self.cap_factor * statistics.median(self._recent)
+
+    def observe(self, loss: float, *, skipped: bool) -> str:
+        """Feed one step's outcome; returns "ok" | "strike" | "rollback"."""
+        bad = skipped or not math.isfinite(loss) or loss > self.loss_cap()
+        if not bad:
+            self.strikes = 0
+            self._recent.append(loss)
+            return "ok"
+        self.strikes += 1
+        if self.strikes >= self.max_strikes:
+            self.strikes = 0
+            self.rollbacks += 1
+            self._recent.clear()  # post-rollback regime starts fresh
+            return "rollback"
+        return "strike"
+
+    def reseed(self, cursor: Cursor) -> Cursor:
+        """Restored data cursor with the post-rollback offset applied."""
+        return cursor.advance(self.reseed_stride * self.rollbacks)

@@ -41,6 +41,7 @@ from repro.models import sasrec as sasrec_lib
 from repro.models import schnet as schnet_lib
 from repro.models import transformer as tf_lib
 from repro.optim import make_optimizer
+from repro.optim.optimizers import global_norm
 
 NEG_INF = -1e30
 
@@ -48,6 +49,43 @@ NEG_INF = -1e30
 # ---------------------------------------------------------------------------
 # Shared helpers
 # ---------------------------------------------------------------------------
+def _pop_loss_cap(batch):
+    """Split the optional ``"loss_cap"`` scalar out of a train batch.
+
+    The divergence guard (``launch/elastic.py``) feeds its dynamic cap
+    into the jitted step as an ordinary batch entry — a 0-d f32 array,
+    so changing the cap never retraces — and the step factories pop it
+    before microbatch reshaping. Batches without the entry (cells.py
+    dry-run lowering, direct step calls in tests) run unguarded against
+    an infinite cap."""
+    batch = dict(batch)
+    return batch, batch.pop("loss_cap", None)
+
+
+def _apply_update_guarded(opt_update, loss, grads, params, opt_state,
+                          loss_cap=None):
+    """Optimizer update gated on step health (DESIGN.md §8).
+
+    ``ok`` = loss finite AND global grad norm finite AND (when a cap is
+    provided) loss ≤ cap. On a bad step params AND optimizer state are
+    kept bit-identical (the step counter does not advance — a skipped
+    step never happened as far as schedules/moments are concerned).
+    Surfaced metrics: ``loss``, ``skipped`` (the on-device skip
+    decision), ``grad_norm`` — the host-side divergence guard keys on
+    ``skipped`` rather than re-deriving finiteness from a float round
+    trip."""
+    gnorm = global_norm(grads)
+    ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+    if loss_cap is not None:
+        ok &= loss <= loss_cap
+    new_params, new_opt = opt_update(grads, opt_state, params)
+    keep = lambda new, old: jax.tree.map(
+        lambda n, o: jnp.where(ok, n, o), new, old
+    )
+    metrics = {"loss": loss, "skipped": ~ok, "grad_norm": gnorm}
+    return keep(new_params, params), keep(new_opt, opt_state), metrics
+
+
 def build_sce_config(
     n_positions_local: int,
     catalog: int,
@@ -232,13 +270,15 @@ def make_lm_train_step(
     accum_dtype = jnp.dtype(arch.accum_dtype)
 
     def train_step(params, opt_state, batch, key):
+        batch, loss_cap = _pop_loss_cap(batch)
         loss, grads = _accumulate_microbatches(
             loss_and_grad, params, batch, key, n_micro, accum_dtype
         )
         # (int8 error-feedback compression, if enabled, lives inside the
         # wrapped optimizer — see optim.with_error_feedback_compression)
-        new_params, new_opt = opt_update(grads, opt_state, params)
-        return new_params, new_opt, {"loss": loss}
+        return _apply_update_guarded(
+            opt_update, loss, grads, params, opt_state, loss_cap
+        )
 
     return train_step, (opt_init, opt_update), sce_cfg
 
@@ -320,11 +360,13 @@ def make_seqrec_train_step(
         return jax.value_and_grad(loss_fn)(params)
 
     def train_step(params, opt_state, batch, key):
+        batch, loss_cap = _pop_loss_cap(batch)
         loss, grads = _accumulate_microbatches(
             loss_and_grad, params, batch, key, n_micro
         )
-        new_params, new_opt = opt_update(grads, opt_state, params)
-        return new_params, new_opt, {"loss": loss}
+        return _apply_update_guarded(
+            opt_update, loss, grads, params, opt_state, loss_cap
+        )
 
     return train_step, (opt_init, opt_update), sce_cfg
 
@@ -534,11 +576,13 @@ def make_recsys_train_step(arch, cfg, mesh, shape, *,
         return jax.value_and_grad(loss_fn)(params)
 
     def train_step(params, opt_state, batch, key):
+        batch, loss_cap = _pop_loss_cap(batch)
         loss, grads = _accumulate_microbatches(
             loss_and_grad, params, batch, key, n_micro
         )
-        new_params, new_opt = opt_update(grads, opt_state, params)
-        return new_params, new_opt, {"loss": loss}
+        return _apply_update_guarded(
+            opt_update, loss, grads, params, opt_state, loss_cap
+        )
 
     return train_step, (opt_init, opt_update)
 
@@ -620,8 +664,10 @@ def make_gnn_train_step(arch, cfg, mesh, shape):
         return jax.value_and_grad(loss_fn)(params)
 
     def train_step(params, opt_state, batch, key):
+        batch, loss_cap = _pop_loss_cap(batch)
         loss, grads = loss_and_grad(params, batch, key)
-        new_params, new_opt = opt_update(grads, opt_state, params)
-        return new_params, new_opt, {"loss": loss}
+        return _apply_update_guarded(
+            opt_update, loss, grads, params, opt_state, loss_cap
+        )
 
     return train_step, (opt_init, opt_update)

@@ -1,28 +1,45 @@
-"""Fault-tolerant training driver (DESIGN.md §4).
+"""Fault-tolerant training driver (DESIGN.md §8).
 
 The same step factories the dry-run lowers are executed here with real
 arrays. Production behavior:
 
-  * **auto-restore**: on start, the latest valid checkpoint (params, opt
-    state, PRNG key, data cursor) is restored; a crashed job relaunches
-    and continues from the last atomic commit.
-  * **async checkpointing** every ``--ckpt-every`` steps (host snapshot +
+  * **auto-restore**: on start, the latest checkpoint that PASSES
+    manifest verification (params, opt state, PRNG key, data cursor) is
+    restored — a corrupt or torn latest step is skipped with a warning,
+    never loaded (CheckpointManager's fallback ladder); a crashed job
+    relaunches and continues from the last intact atomic commit.
+  * **async checkpointing** under a combined step- (``--ckpt-every``) +
+    wall-clock- (``--ckpt-interval-s``) save policy (host snapshot +
     background write; the step loop never blocks on I/O).
+  * **preemption**: SIGTERM/SIGINT finish the in-flight step, take a
+    final *blocking* save, and exit with ``elastic.EXIT_PREEMPTED`` (42)
+    so the launcher can distinguish "clean preemption — relaunch" from
+    a crash. ``kill -9`` needs no cooperation: the atomic-rename commit
+    protocol means relaunch resumes from the last completed write.
+  * **divergence guard**: non-finite or above-cap losses skip the param
+    AND optimizer update on-device (``steps._apply_update_guarded``);
+    ``--max-strikes`` consecutive bad steps roll back to the last
+    verified checkpoint with a reseeded data offset
+    (``elastic.DivergenceGuard``) instead of training on poisoned state.
   * **straggler watchdog**: steps slower than ``watchdog × median`` are
     logged; with ``--skip-stragglers`` the *data load* of the next step
     reuses the previous host batch (bounded staleness) instead of
     blocking on a slow input shard.
-  * **elastic restart**: checkpoints are host-gathered, so ``--ckpt-dir``
-    written on one mesh restores onto any other (see CheckpointManager).
+  * **elastic restart**: checkpoints are host-gathered and the data
+    cursor stores only the global ``(seed, step)``, so ``--ckpt-dir``
+    written on one mesh/host count restores onto any other: with
+    ``--n-hosts H`` the device batch is assembled from H per-host
+    ``ShardedCursor`` slices whose concatenation is bit-identical to
+    the global stream for every H (single-process emulation of the
+    per-host sharded input pipeline — the resharding drill resumes an
+    H-host checkpoint at H′ and the loss curve doesn't move).
   * optional **int8 error-feedback gradient compression** models the
     cross-pod DCI payload (--grad-compression int8).
   * **periodic in-loop evaluation** (``--eval-every``) through
-    ``repro.eval``, dispatched on ``ArchSpec.eval_protocol``:
-    leave-one-out unsampled HR/NDCG/COV on a held-out user stream
-    (seqrec) or held-out token-rank HR/NDCG/mean-rank + next-token loss
-    over EVERY position (lm) — streaming rank-and-topk, never a
-    ``(rows, C)`` score matrix; sharded over the mesh when the model
-    axis is >1. Archs without a protocol warn loudly and skip.
+    ``repro.eval``, dispatched on ``ArchSpec.eval_protocol``.
+  * ``--metrics-file`` appends one JSON line per completed step
+    (step/loss/skipped/grad_norm) — the kill-drills diff these curves
+    step-for-step across kill/restore boundaries.
 
 On this CPU container, ``--smoke`` selects each arch's reduced config so
 the loop actually trains; the full configs are exercised via dryrun.py.
@@ -35,7 +52,9 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import statistics
+import sys
 import time
 from typing import Any, Dict, Optional
 
@@ -52,9 +71,16 @@ from repro.data import (
     Cursor,
     SeqDataConfig,
     SequenceDataset,
+    ShardedCursor,
     batched_molecules,
 )
 from repro.launch import steps as steps_lib
+from repro.launch.elastic import (
+    EXIT_PREEMPTED,
+    DivergenceGuard,
+    PreemptionHandler,
+    TrainState,
+)
 from repro.launch.mesh import make_host_mesh
 
 
@@ -137,7 +163,15 @@ def _make_step(arch, cfg, mesh, shape, sce_mode, grad_compression=None):
     return step, opt
 
 
-def _host_batch(arch, data, cursor, shape, cfg):
+def _host_batch(arch, data, cursor, shape, cfg, n_hosts: int = 1):
+    """Next host batch at ``cursor``.
+
+    With ``n_hosts > 1`` each emulated host independently produces its
+    local slice through its own :class:`ShardedCursor` and the device
+    batch is their concatenation — bit-identical to the 1-host global
+    batch for every H (the property the resharding drill pins), while
+    actually exercising the per-host sharded code path.
+    """
     if arch.family == "gnn":
         return batched_molecules(
             cursor,
@@ -146,7 +180,20 @@ def _host_batch(arch, data, cursor, shape, cfg):
             edges_per_mol=shape.dims["n_edges"],
             d_feat=shape.dims["d_feat"],
         )
-    batch, cur = data.next_batch(cursor)
+    if n_hosts == 1:
+        batch, cur = data.next_batch(cursor)
+    else:
+        parts = [
+            data.next_batch_sharded(
+                ShardedCursor(cursor, host_id=h, n_hosts=n_hosts)
+            )[0]
+            for h in range(n_hosts)
+        ]
+        batch = {
+            k: np.concatenate([p[k] for p in parts], axis=0)
+            for k in parts[0]
+        }
+        cur = cursor.advance()
     if arch.family == "seqrec" and not getattr(cfg, "causal", True):
         batch = {"tokens": batch["tokens"]}  # bert4rec masks in-step
     return batch, cur
@@ -160,6 +207,7 @@ def train(
     seq_len: int = 32,
     ckpt_dir: Optional[str] = None,
     ckpt_every: int = 20,
+    ckpt_interval_s: Optional[float] = None,
     keep_n: int = 3,
     seed: int = 0,
     sce_mode: str = "exact",
@@ -169,9 +217,25 @@ def train(
     log_every: int = 10,
     eval_every: int = 0,
     eval_users: int = 128,
+    n_hosts: int = 1,
+    max_strikes: int = 3,
+    guard_factor: float = 100.0,
+    metrics_file: Optional[str] = None,
+    chaos_nan_at: Optional[int] = None,
 ) -> Dict[str, Any]:
-    """Run a real (smoke-scale) training loop; returns final metrics."""
+    """Run a real (smoke-scale) training loop; returns final metrics.
+
+    ``chaos_nan_at`` is the fault-injection hook the divergence drill
+    uses: at that host step the params are multiplied by NaN *once*,
+    which must be survived (update skipped on-device, strikes, rollback
+    to the last verified checkpoint) — never shipped.
+    """
     arch = get_arch(arch_name)
+    if n_hosts > 1 and arch.family == "gnn":
+        raise ValueError("--n-hosts emulation needs a sharded dataset; "
+                         "the gnn molecule stream has none")
+    if n_hosts > 1 and batch % n_hosts:
+        raise ValueError(f"batch {batch} not divisible by n_hosts {n_hosts}")
     mesh = make_host_mesh(max_data=batch)
     cfg, shape, data = _smoke_setup(arch, batch, seq_len)
     step_fn, (opt_init, _) = _make_step(
@@ -181,22 +245,37 @@ def train(
 
     key = jax.random.PRNGKey(seed)
     params = _init_params(arch, cfg, key)
-    opt_state = opt_init(params)
-    cursor = Cursor(seed=seed)
-    start_step = 0
-    mgr = CheckpointManager(ckpt_dir, keep_n=keep_n) if ckpt_dir else None
+    state = TrainState(
+        params=params,
+        opt_state=opt_init(params),
+        key=key,
+        cursor=Cursor(seed=seed),
+        step=-1,
+    )
+    mgr = (
+        CheckpointManager(
+            ckpt_dir,
+            keep_n=keep_n,
+            save_every_steps=ckpt_every,
+            save_interval_seconds=ckpt_interval_s,
+        )
+        if ckpt_dir
+        else None
+    )
+
+    def _restore_or(state):
+        """Newest verified checkpoint, or ``state`` unchanged."""
+        last, tree = mgr.restore_latest()
+        if last is None:
+            return state, None
+        restored = TrainState.from_ckpt(
+            tree, opt_template=opt_init(state.params)
+        )
+        print(f"[restore] resumed from step {last}")
+        return restored, last
+
     if mgr is not None:
-        last, state = mgr.restore_latest()
-        if last is not None:
-            params = state["params"]
-            opt_state = jax.tree_util.tree_unflatten(
-                jax.tree_util.tree_structure(opt_state),
-                jax.tree_util.tree_leaves(state["opt_state"]),
-            )
-            key = state["key"]
-            cursor = Cursor.from_state(state["cursor"])
-            start_step = int(state["step"]) + 1
-            print(f"[restore] resumed from step {last}")
+        state, _ = _restore_or(state)
 
     # Periodic unsampled eval, dispatched on the arch's declared
     # protocol (configs.common.ArchSpec.eval_protocol): streaming
@@ -234,13 +313,49 @@ def train(
             eval_batch, _ = eval_data.eval_batch(Cursor(seed=seed))
         eval_mesh = mesh if mesh.shape.get("model", 1) > 1 else None
 
+    guard = DivergenceGuard(max_strikes=max_strikes,
+                            cap_factor=guard_factor)
+    metrics_fh = open(metrics_file, "a") if metrics_file else None
+    chaos_fired = False
+
+    def record(step, loss, skipped, grad_norm):
+        if metrics_fh is None:
+            return
+        metrics_fh.write(json.dumps({
+            "step": step, "loss": loss, "skipped": skipped,
+            "grad_norm": grad_norm,
+        }) + "\n")
+        metrics_fh.flush()
+
+    def save_state(blocking: bool):
+        mgr.save(
+            state.step,
+            state.to_ckpt(n_hosts=n_hosts),
+            blocking=blocking,
+        )
+
     losses, times = [], []
+    skipped_steps = 0
+    preempted = False
     prev_batch = None
-    with set_mesh(mesh):
-        for step in range(start_step, steps):
+    with set_mesh(mesh), PreemptionHandler() as preemption:
+        step = state.step + 1
+        while step < steps:
+            if preemption.preempted:
+                preempted = True
+                break
+            if chaos_nan_at is not None and step == chaos_nan_at \
+                    and not chaos_fired:
+                chaos_fired = True
+                print(f"[chaos] step {step}: poisoning params with NaN")
+                state.params = jax.tree.map(
+                    lambda p: (p * jnp.nan).astype(p.dtype)
+                    if jnp.issubdtype(p.dtype, jnp.floating) else p,
+                    state.params,
+                )
             t0 = time.time()
             host_batch, new_cursor = _host_batch(
-                arch, data, cursor, shape, cfg
+                arch, data, state.cursor, shape, cfg, n_hosts
             )
             t_data = time.time() - t0
             # Straggler mitigation: if data loading stalls, reuse the
@@ -254,19 +369,57 @@ def train(
                 host_batch = prev_batch
                 print(f"[watchdog] step {step}: slow input shard "
                       f"({t_data:.2f}s) — reusing previous batch")
+                new_cursor = state.cursor
             else:
-                cursor = new_cursor
                 prev_batch = host_batch
 
-            key, step_key = jax.random.split(key)
+            state.key, step_key = jax.random.split(state.key)
             dev_batch = jax.tree.map(jnp.asarray, host_batch)
-            params, opt_state, metrics = jit_step(
-                params, opt_state, dev_batch, step_key
+            dev_batch["loss_cap"] = jnp.float32(guard.loss_cap())
+            state.params, state.opt_state, metrics = jit_step(
+                state.params, state.opt_state, dev_batch, step_key
             )
             loss = float(metrics["loss"])
+            skipped = bool(metrics.get("skipped", False))
+            grad_norm = float(metrics.get("grad_norm", np.nan))
+            state.cursor = new_cursor
+            state.step = step
             dt = time.time() - t0
             losses.append(loss)
             times.append(dt)
+            record(step, loss, skipped, grad_norm)
+
+            verdict = guard.observe(loss, skipped=skipped)
+            if verdict != "ok":
+                skipped_steps += 1
+                print(f"[guard] step {step}: loss {loss:.4g} "
+                      f"grad_norm {grad_norm:.4g} — update skipped "
+                      f"(strike {guard.strikes or guard.max_strikes}"
+                      f"/{guard.max_strikes})")
+            if verdict == "rollback":
+                if mgr is None:
+                    raise RuntimeError(
+                        f"diverged for {guard.max_strikes} consecutive "
+                        f"steps at step {step} and no --ckpt-dir to roll "
+                        f"back to"
+                    )
+                mgr.wait()  # an in-flight async save must land first
+                rolled, last = _restore_or(
+                    dataclasses.replace(state)
+                )
+                if last is None:
+                    raise RuntimeError(
+                        "diverged and no intact checkpoint to roll "
+                        "back to"
+                    )
+                state = rolled
+                state.cursor = guard.reseed(state.cursor)
+                print(f"[guard] rolled back to verified step {last} "
+                      f"(rollback #{guard.rollbacks}, data offset "
+                      f"+{guard.reseed_stride * guard.rollbacks})")
+                step = state.step + 1
+                continue
+
             if times and dt > watchdog * statistics.median(times):
                 print(f"[watchdog] step {step} took {dt:.2f}s "
                       f"(median {statistics.median(times):.2f}s)")
@@ -275,34 +428,41 @@ def train(
             if do_eval and (step + 1) % eval_every == 0:
                 if protocol == "token-rank":
                     eval_metrics = evaluate_streaming_lm(
-                        params, cfg, eval_batch, mesh=eval_mesh
+                        state.params, cfg, eval_batch, mesh=eval_mesh
                     )
                 else:
                     eval_metrics = evaluate_streaming(
-                        params, cfg, eval_batch, mesh=eval_mesh
+                        state.params, cfg, eval_batch, mesh=eval_mesh
                     )
                 shown = {k: round(v, 4) for k, v in eval_metrics.items()}
                 print(f"[eval] step {step}: {shown}")
-            if mgr is not None and (step + 1) % ckpt_every == 0:
-                mgr.save(
-                    step,
-                    {
-                        "params": params,
-                        "opt_state": opt_state,
-                        "key": key,
-                        "cursor": cursor.to_state(),
-                        "step": step,
-                    },
-                    blocking=False,
-                )
+            if mgr is not None and mgr.should_save(step):
+                save_state(blocking=False)
+            step += 1
+        if preemption.preempted and not preempted:
+            preempted = True  # signal arrived during the final step
+
     if mgr is not None:
         mgr.wait()
+        if preempted:
+            # Final BLOCKING save of the exact current state so the
+            # relaunch loses zero completed steps.
+            save_state(blocking=True)
+            print(f"[preempt] state saved at step {state.step}; "
+                  f"exit {EXIT_PREEMPTED} to request relaunch")
+    if metrics_fh is not None:
+        metrics_fh.close()
     out: Dict[str, Any] = {
         "first_loss": losses[0] if losses else None,
         "final_loss": losses[-1] if losses else None,
         "steps": len(losses),
         "mean_step_s": statistics.mean(times) if times else None,
+        "skipped_steps": skipped_steps,
+        "rollbacks": guard.rollbacks,
     }
+    if preempted:
+        out["preempted"] = True
+        out["preempt_step"] = state.step
     if eval_metrics:
         out["eval"] = eval_metrics
     return out
@@ -315,12 +475,35 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=32)
     ap.add_argument("--ckpt-dir")
-    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--ckpt-every", type=int, default=20,
+                    help="step-based save interval")
+    ap.add_argument("--ckpt-interval-s", type=float,
+                    help="wall-clock save interval in seconds (combined "
+                         "with --ckpt-every: whichever fires first)")
+    ap.add_argument("--keep-n", type=int, default=3,
+                    help="checkpoints retained (0 = all)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sce-mode", default="exact",
                     choices=["exact", "union", "gspmd"])
     ap.add_argument("--grad-compression", choices=["int8"])
     ap.add_argument("--skip-stragglers", action="store_true")
+    ap.add_argument("--n-hosts", type=int, default=1,
+                    help="emulated host count: the device batch is the "
+                         "concat of per-host ShardedCursor slices; any "
+                         "value yields the identical global stream")
+    ap.add_argument("--max-strikes", type=int, default=3,
+                    help="consecutive bad steps before rolling back to "
+                         "the last verified checkpoint")
+    ap.add_argument("--guard-factor", type=float, default=100.0,
+                    help="divergence cap = factor x running median loss")
+    ap.add_argument("--metrics-file",
+                    help="append one JSON line per step (the kill-drill "
+                         "loss-curve record)")
+    ap.add_argument("--chaos-nan-at", type=int,
+                    help="fault injection: poison params with NaN at "
+                         "this step once (divergence drill)")
+    ap.add_argument("--log-every", type=int, default=10,
+                    help="print a progress line every N steps")
     ap.add_argument("--eval-every", type=int, default=0,
                     help="run streaming unsampled eval every N steps "
                          "(seqrec: leave-one-out; lm: token-rank over "
@@ -338,14 +521,24 @@ def main() -> None:
         seq_len=args.seq_len,
         ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every,
+        ckpt_interval_s=args.ckpt_interval_s,
+        keep_n=args.keep_n,
         seed=args.seed,
         sce_mode=args.sce_mode,
         grad_compression=args.grad_compression,
         skip_stragglers=args.skip_stragglers,
+        n_hosts=args.n_hosts,
+        max_strikes=args.max_strikes,
+        guard_factor=args.guard_factor,
+        metrics_file=args.metrics_file,
+        chaos_nan_at=args.chaos_nan_at,
+        log_every=args.log_every,
         eval_every=args.eval_every,
         eval_users=args.eval_users,
     )
     print(out)
+    if out.get("preempted"):
+        sys.exit(EXIT_PREEMPTED)
 
 
 if __name__ == "__main__":

@@ -2,7 +2,7 @@
 satellites): run the ``--json`` bench CLIs at smoke scale and assert
 the required keys/types of ``BENCH_metric_memory.json`` /
 ``BENCH_sce_pipeline.json`` / ``BENCH_eval_pipeline.json`` /
-``BENCH_lm_loss.json`` / ``BENCH_serve.json`` — so
+``BENCH_lm_loss.json`` / ``BENCH_serve.json`` / ``BENCH_ckpt.json`` — so
 benchmark refactors can't silently break the perf-trajectory tracking
 the CI artifacts accumulate."""
 import json
@@ -180,6 +180,46 @@ def test_serve_json_schema(tmp_path):
         assert row["requests"] >= b
         assert row["p99_ms"] >= row["p50_ms"] > 0
         assert row["qps"] > 0
+
+
+def test_ckpt_json_schema(tmp_path):
+    """BENCH_ckpt.json: the fault-tolerance substrate rows (ISSUE 8) —
+    blocking/async save, verified restore and the corrupt-latest
+    fallback restore, all timed through the real CheckpointManager; the
+    ``unverified_loads`` column on the restore rows is pinned to ZERO
+    (the fallback ladder never loads bytes that failed manifest
+    verification — the trajectory check's zero-baseline rule gates it
+    in CI), and the async stall must not exceed the blocking save."""
+    doc = _run_bench(
+        tmp_path, "benchmarks.kernel_bench",
+        "--mode", "ckpt", "--ckpt-elems", "65536",
+    )
+    assert set(doc) == {"mode", "rows", "derived"}
+    assert doc["mode"] == "ckpt"
+    assert isinstance(doc["derived"], str)
+    assert "unverified_loads=0" in doc["derived"]
+    rows = {r["stage"]: r for r in doc["rows"]}
+    assert set(rows) == {
+        "save_blocking", "save_async_stall", "save_async_total",
+        "restore_verify", "restore_fallback",
+    }
+    spec = {
+        "stage": str,
+        "elems": numbers.Integral,
+        "wall_ms": numbers.Real,
+    }
+    for stage, row in rows.items():
+        _assert_row(row, spec, f"ckpt[{stage}]")
+        assert row["wall_ms"] > 0, row
+        assert row["elems"] == 65536
+    for stage in ("restore_verify", "restore_fallback"):
+        assert rows[stage]["unverified_loads"] == 0, rows[stage]
+    # The whole point of the async path: the step loop only pays the
+    # host-snapshot stall, not the filesystem write.
+    assert (
+        rows["save_async_stall"]["wall_ms"]
+        <= rows["save_blocking"]["wall_ms"]
+    )
 
 
 def test_lm_loss_json_schema(tmp_path):

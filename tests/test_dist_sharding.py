@@ -12,6 +12,7 @@ from repro.dist.sharding import (
     batch_spec,
     catalog_spec,
     data_axes,
+    host_batch_slice,
     named_sharding_tree,
     opt_state_specs,
     recsys_param_specs,
@@ -44,6 +45,37 @@ def test_batch_and_catalog_specs(mesh):
     assert batch_spec(mesh, 3) == P(("data",), None, None)
     assert batch_spec(mesh, 2, batch_dim=1) == P(None, ("data",))
     assert catalog_spec(mesh) == P("model", None)
+
+
+def test_host_batch_slice_partitions_rows():
+    import numpy as np
+
+    rows = 12
+    for n_hosts in (1, 2, 3, 4, 6):
+        slices = [host_batch_slice(rows, h, n_hosts) for h in range(n_hosts)]
+        covered = np.concatenate([np.arange(rows)[s] for s in slices])
+        assert covered.tolist() == list(range(rows))  # exact partition
+    with pytest.raises(ValueError):
+        host_batch_slice(12, 0, 5)  # non-divisible
+    with pytest.raises(ValueError):
+        host_batch_slice(12, 4, 4)  # host_id out of range
+
+
+def test_host_batch_slice_matches_sharded_cursor():
+    """The device-placement slice and the data layer's ShardedCursor
+    slicing must agree row-for-row (DESIGN.md §8: one ownership rule)."""
+    import numpy as np
+
+    from repro.data import Cursor, ShardedCursor
+
+    batch = {"x": np.arange(24).reshape(8, 3), "y": np.arange(8)}
+    for n_hosts in (1, 2, 4):
+        for h in range(n_hosts):
+            sc = ShardedCursor(Cursor(seed=0), host_id=h, n_hosts=n_hosts)
+            via_cursor = sc.shard(batch)
+            sl = host_batch_slice(8, h, n_hosts)
+            for k in batch:
+                assert (via_cursor[k] == batch[k][sl]).all()
 
 
 def test_seqrec_specs_mirror_params(mesh):

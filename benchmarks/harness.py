@@ -23,7 +23,13 @@ from repro.eval import (
     eval_peak_elements,
     evaluate_streaming,
 )
-from repro.data import Cursor, SeqDataConfig, SequenceDataset
+from repro.data import (
+    Cursor,
+    LongTailConfig,
+    LongTailDataset,
+    SeqDataConfig,
+    SequenceDataset,
+)
 from repro.models import sasrec
 from repro.optim import make_optimizer
 
@@ -39,6 +45,25 @@ class RunResult:
     # streaming rank-and-topk peak vs the (B, C) materializing path
     eval_peak_elements: int = 0
     eval_dense_elements: int = 0
+    # steady-state training throughput: flattened positions per second,
+    # measured AFTER the first step so jit compile time doesn't pollute
+    # the number (train_time_s keeps the total incl. compile).
+    positions_per_s: float = 0.0
+
+
+def _make_dataset(data_kind: str, n_items: int, seq_len: int, batch: int,
+                  **data_kwargs):
+    if data_kind == "cluster":
+        return SequenceDataset(SeqDataConfig(
+            n_items=n_items, seq_len=seq_len, batch_size=batch,
+            **data_kwargs,
+        ))
+    if data_kind == "longtail":
+        return LongTailDataset(LongTailConfig(
+            n_items=n_items, seq_len=seq_len, batch_size=batch,
+            **data_kwargs,
+        ))
+    raise KeyError(f"unknown data_kind {data_kind!r}")
 
 
 def make_sasrec_loss_fn(loss_name: str, sce_cfg=None, **loss_kwargs):
@@ -65,15 +90,14 @@ def train_sasrec(
     seed: int = 0,
     lr: float = 1e-3,
     collect_aux: bool = False,
+    data_kind: str = "cluster",
     **loss_kwargs,
 ) -> RunResult:
     cfg = sasrec.SeqRecConfig(
         n_items=n_items, max_len=seq_len, d_model=d_model,
         n_layers=2, n_heads=2, dropout=0.0,
     )
-    data = SequenceDataset(SeqDataConfig(
-        n_items=n_items, seq_len=seq_len, batch_size=batch,
-    ))
+    data = _make_dataset(data_kind, n_items, seq_len, batch)
     loss_fn = make_sasrec_loss_fn(loss_name, sce_cfg, **loss_kwargs)
     opt_init, opt_update = make_optimizer("adamw", lr)
 
@@ -102,6 +126,7 @@ def train_sasrec(
     aux_hist = [] if collect_aux else None
     final_loss = float("nan")
     t0 = time.time()
+    t_warm = t0  # set after step 0 (jit compile) completes
     for s in range(steps):
         b, cursor = data.next_batch(cursor)
         key, k = jax.random.split(key)
@@ -113,24 +138,33 @@ def train_sasrec(
         if collect_aux and aux:
             aux_hist.append({k2: float(v) for k2, v in aux.items()})
         final_loss = float(loss)
-    train_time = time.time() - t0
+        if s == 0:
+            t_warm = time.time()
+    t_end = time.time()
+    train_time = t_end - t0
+    n_pos = batch * seq_len
+    if steps > 1 and t_end > t_warm:
+        positions_per_s = (steps - 1) * n_pos / (t_end - t_warm)
+    else:
+        positions_per_s = steps * n_pos / max(train_time, 1e-9)
 
     # Held-out users (disjoint cursor stream, paper's temporal-split
     # idea), scored through the streaming eval path — the unsampled
     # metrics no longer cost a (B_eval, C) score matrix.
-    eval_data = SequenceDataset(SeqDataConfig(
-        n_items=n_items, seq_len=seq_len, batch_size=eval_users,
-    ))
+    eval_data = _make_dataset(data_kind, n_items, seq_len, eval_users)
     eval_batch, _ = eval_data.eval_batch(Cursor(seed=seed))
     eval_block_c = min(512, n_items)
     metrics = evaluate_streaming(params, cfg, eval_batch,
                                  block_c=eval_block_c)
 
-    num_negs = loss_kwargs.get("num_negatives", 0)
+    # Config-faithful memory accounting: forward the loss's own kwargs
+    # (chunk_size, n_chunks, num_negatives, block_n/block_c, ...) so the
+    # analytic peak is the peak of the loss as configured, not a
+    # defaults-only estimate.
     peak = loss_peak_elements(
         "sce" if loss_name == "sce" else loss_name,
-        batch * seq_len, n_items, d_model,
-        num_negatives=num_negs, cfg=sce_cfg,
+        n_pos, n_items, d_model,
+        cfg=sce_cfg, **loss_kwargs,
     )
     return RunResult(
         metrics=metrics,
@@ -142,4 +176,5 @@ def train_sasrec(
             eval_users, 10, eval_block_c
         ),
         eval_dense_elements=dense_eval_elements(eval_users, n_items),
+        positions_per_s=positions_per_s,
     )

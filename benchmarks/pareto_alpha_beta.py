@@ -4,10 +4,23 @@ quality-vs-memory Pareto front (synthetic catalog, reduced grid).
 For each (α, β) we sweep b_y and record (loss-memory, NDCG@10); the
 paper's finding to reproduce: fronts for α ∈ {2,4} × β ∈ {1,4} land on
 approximately the same optimal frontier, so α=2, β=1 is a safe default.
+
+(The multi-LOSS Pareto — SCE vs RECE vs blockwise CE vs the sampled
+family at catalogs up to 10M — lives in ``benchmarks/pareto_losses.py``;
+this file sweeps SCE's own hyperparameters.)
+
+CLI: ``--steps N`` for smoke runs, ``--json PATH`` for the
+schema-pinned ``BENCH_pareto_ab.json`` artifact — the same contract as
+every other bench. ``peak_elems_vs_naive`` (analytic, machine
+independent) is the column ``benchmarks/trajectory.py`` gates.
 """
 from __future__ import annotations
 
+import argparse
+import json
+
 from benchmarks.harness import train_sasrec
+from repro.core.losses import loss_peak_elements
 from repro.core.sce import SCEConfig
 
 N_ITEMS, BATCH, SEQ = 2000, 32, 50
@@ -18,6 +31,7 @@ GRID_BY = (32, 128)
 
 def run(steps: int = 100):
     n_pos = BATCH * SEQ
+    naive = loss_peak_elements("ce", n_pos, N_ITEMS, 48)
     rows = []
     for alpha in GRID_ALPHA:
         for beta in GRID_BETA:
@@ -31,8 +45,11 @@ def run(steps: int = 100):
                     batch=BATCH, seq_len=SEQ, steps=steps,
                 )
                 rows.append({
+                    "label": f"a{alpha:g}_b{beta:g}_y{b_y}",
                     "alpha": alpha, "beta": beta, "b_y": b_y,
                     "mem_elems": res.loss_peak_elements,
+                    "peak_elems_vs_naive":
+                        res.loss_peak_elements / naive,
                     "ndcg@10": res.metrics["ndcg@10"],
                 })
     best_default = max(
@@ -49,12 +66,24 @@ def run(steps: int = 100):
 
 
 def main():
-    rows, derived = run()
-    print("alpha,beta,b_y,mem_elems,ndcg@10")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--json", help="write rows + derived summary to PATH")
+    args = ap.parse_args()
+    rows, derived = run(steps=args.steps)
+    print("alpha,beta,b_y,mem_elems,peak_elems_vs_naive,ndcg@10")
     for r in rows:
         print(f"{r['alpha']},{r['beta']},{r['b_y']},{r['mem_elems']},"
-              f"{r['ndcg@10']:.4f}")
+              f"{r['peak_elems_vs_naive']:.4f},{r['ndcg@10']:.4f}")
     print(derived)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                {"mode": "pareto-alpha-beta", "steps": args.steps,
+                 "rows": rows, "derived": derived},
+                f, indent=2,
+            )
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

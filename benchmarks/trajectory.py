@@ -59,6 +59,11 @@ _RATIO_METRICS = {
 
 
 def _row_label(row, i):
+    # An explicit "label" wins — benches whose rows aren't unique under
+    # a single key (e.g. pareto rows: same loss at several catalog
+    # sizes) emit one so metrics don't collide across rows.
+    if "label" in row:
+        return str(row["label"])
     if "protocol" in row:
         return f"{row['protocol']}/{row.get('path', '')}/{row.get('stage', '')}"
     for k in ("loss", "stage", "shape", "metric", "bucket"):

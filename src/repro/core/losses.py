@@ -244,6 +244,18 @@ def ce_inbatch(x, y, targets, valid_mask=None, key=None) -> Tuple[jax.Array, Aux
     return _mean_over_valid(per_pos, valid_mask), {}
 
 
+def _sample_popularity_negatives(key, n, k, popularity):
+    """k popularity-proportional negatives per position via inverse-CDF
+    (searchsorted) — O(C) memory and O(n·k·log C) work. The obvious
+    ``jax.random.categorical(key, logp, shape=(n, k))`` materializes an
+    ``(n, k, C)`` gumbel tensor: ~131 TB at C = 1M, k = 128 — unusable
+    at exactly the catalog sizes popularity sampling exists for."""
+    w = jnp.maximum(popularity.astype(jnp.float32), 0.0)
+    cdf = jnp.cumsum(w)
+    u = jax.random.uniform(key, (n, k), maxval=cdf[-1])
+    return jnp.searchsorted(cdf, u, side="right").astype(jnp.int32)
+
+
 def ce_pop(
     x, y, targets, valid_mask=None, key=None, *,
     num_negatives: int = 1, popularity: Optional[jax.Array] = None,
@@ -256,15 +268,35 @@ def ce_pop(
     if popularity is None:
         neg_ids = _sample_negatives(key, n, num_negatives, c)
     else:
-        logp = jnp.log(jnp.maximum(popularity.astype(jnp.float32), 1e-9))
-        neg_ids = jax.random.categorical(
-            key, logp[None, :], shape=(n, num_negatives)
-        ).astype(jnp.int32)
+        neg_ids = _sample_popularity_negatives(
+            key, n, num_negatives, popularity
+        )
     pos = jnp.einsum("nd,nd->n", x, jnp.take(y, targets, axis=0))
     neg = _neg_logits(x, y, neg_ids, targets)
     all_logits = jnp.concatenate([pos[:, None], neg], axis=-1)
     per_pos = jax.nn.logsumexp(all_logits, axis=-1) - pos
     return _mean_over_valid(per_pos, valid_mask), {}
+
+
+def lsh_codes(v: jax.Array, planes: jax.Array) -> jax.Array:
+    """Angular-LSH bucket codes: pack the sign pattern of ``v @ planes``
+    into one unsigned integer per row.
+
+    Packing runs in **uint32**: the previous int32 packing shifted
+    ``1 << 31`` into the sign bit at ``n_hashes >= 31``, collapsing
+    distinct sign patterns onto colliding (negative) codes. uint32 keeps
+    all 32 bit positions distinct; more than 32 hyperplanes would need a
+    multi-word sort key and is rejected by :func:`rece` up front.
+    """
+    n_hashes = planes.shape[-1]
+    if n_hashes > 32:
+        raise ValueError(
+            f"lsh_codes packs into uint32 — n_hashes must be <= 32, "
+            f"got {n_hashes}"
+        )
+    bits = jnp.arange(n_hashes, dtype=jnp.uint32)
+    s = (jax.lax.stop_gradient(v) @ planes) > 0
+    return jnp.sum(s.astype(jnp.uint32) << bits, axis=-1)
 
 
 def rece(
@@ -278,20 +310,32 @@ def rece(
     sizes fixed by the partition, unlike SCE's tunable top-k buckets);
     a chunking step equalizes bucket sizes by sorting on the hash code
     and cutting equal chunks; CE is computed within aligned chunks.
+
+    Truncation semantics (the equal-chunk cut is lossy, by design):
+
+      * a tail of ``N mod n_chunks`` positions falls off the sorted
+        position order and contributes NOTHING to the loss — the mean is
+        taken only over covered-and-valid positions
+        (``aux["covered_frac"]``);
+      * a tail of ``C mod (n_chunks * (C // n_chunks))`` catalog items
+        never appears as a negative for anyone this step
+        (``aux["catalog_frac"]``). Targets landing in that tail still
+        get their positive logit (the positive is gathered directly,
+        not through the chunk cut).
+
+    Both fractions are surfaced in aux so training loops and benchmarks
+    can see the coverage the approximation actually delivers.
     """
     assert key is not None
+    if not 1 <= n_hashes <= 32:
+        raise ValueError(f"n_hashes must be in [1, 32], got {n_hashes}")
     n, d = x.shape
     c = y.shape[0]
     planes = jax.random.normal(key, (d, n_hashes))
-    bits = jnp.arange(n_hashes)
-
-    def codes(v):
-        s = (jax.lax.stop_gradient(v) @ planes) > 0
-        return jnp.sum(s.astype(jnp.int32) << bits, axis=-1)
 
     # sort by code; equal-size chunks = the RECE chunking step
-    x_order = jnp.argsort(codes(x))
-    y_order = jnp.argsort(codes(y))
+    x_order = jnp.argsort(lsh_codes(x, planes))
+    y_order = jnp.argsort(lsh_codes(y, planes))
     cx, cy = n // n_chunks, c // n_chunks
     xi = x_order[: n_chunks * cx].reshape(n_chunks, cx)
     yi = y_order[: n_chunks * cy].reshape(n_chunks, cy)
@@ -307,15 +351,22 @@ def rece(
     losses = jax.nn.logsumexp(all_logits, axis=-1) - pos  # (n_chunks, cx)
 
     # scatter back to positions (each position in exactly one chunk);
-    # the sort may drop a tail of < n_chunks positions — mask them out
+    # the sort drops a tail of N mod n_chunks positions — mask them out
     per_pos = jnp.zeros((n,), losses.dtype).at[xi.reshape(-1)].set(
         losses.reshape(-1)
     )
     covered = jnp.zeros((n,), bool).at[xi.reshape(-1)].set(True)
     if valid_mask is not None:
         covered = covered & valid_mask
+        n_valid = jnp.maximum(jnp.sum(valid_mask.astype(per_pos.dtype)), 1.0)
+    else:
+        n_valid = jnp.asarray(float(n), per_pos.dtype)
     w = covered.astype(per_pos.dtype)
-    return jnp.sum(per_pos * w) / jnp.maximum(jnp.sum(w), 1.0), {}
+    aux = {
+        "covered_frac": jnp.sum(w) / n_valid,
+        "catalog_frac": jnp.asarray((n_chunks * cy) / max(c, 1), per_pos.dtype),
+    }
+    return jnp.sum(per_pos * w) / jnp.maximum(jnp.sum(w), 1.0), aux
 
 
 def _sce_wrapper(x, y, targets, valid_mask=None, key=None, *, cfg: SCEConfig):
@@ -356,33 +407,65 @@ def loss_peak_elements(
     d: int,
     *,
     num_negatives: int = 0,
+    chunk_size: int = 8192,
+    n_chunks: int = 16,
+    block_n: int = 256,
+    block_c: int = 512,
     cfg: Optional[SCEConfig] = None,
+    **_loss_kwargs,
 ) -> int:
     """Analytic peak element count of loss-side tensors (paper Figs. 2/5).
 
     Counts the logit tensor plus any materialized negative/candidate
     embedding gathers — the terms that actually dominate the PyTorch
     memory-profiler traces in the paper.
+
+    Accepts the SAME configuration kwargs :func:`make_loss` takes
+    (``chunk_size`` for ``ce_chunked``, ``n_chunks`` for ``rece``,
+    ``num_negatives`` for the sampled family, ``block_n``/``block_c``
+    for ``ce_fused_linear``, ``cfg`` for ``sce``), so the memory axis a
+    benchmark reports is the memory of the loss it actually ran — no
+    hardcoded defaults. Kwargs that don't affect memory (``t``,
+    ``logit_softcap``, ``popularity``, ``n_hashes``, ...) are accepted
+    and ignored, so a benchmark can forward its ``make_loss`` kwargs
+    dict verbatim.
     """
     if name in ("ce",):
         return n_positions * catalog
-    if name in ("ce_chunked", "ce_fused"):
-        return n_positions * min(8192, catalog)
+    if name == "ce_chunked":
+        return n_positions * min(chunk_size, catalog)
+    if name == "ce_fused":
+        # Forward-only fusion: the Pallas forward streams the catalog,
+        # but its autodiff backward REMATERIALIZES the dense (N, C)
+        # logits — a training step peaks at the full matrix. (The
+        # honest streaming training loss is ce_fused_linear.)
+        return n_positions * catalog
     if name == "ce_fused_linear":
         # Fully fused linear CE: per-position f32 carries (loss, lse and
         # the dX/dW streams' cotangent rows live one tile at a time in
         # VMEM). HBM-resident loss-side state is V-independent — 4 f32
         # vectors of length N plus one (block_n, block_c) logit tile.
-        return 4 * n_positions + min(256, n_positions) * min(512, catalog)
+        return 4 * n_positions + min(block_n, n_positions) * min(
+            block_c, catalog
+        )
     if name in ("bce", "bce_plus", "gbce", "ce_minus", "ce_pop"):
         k = max(1, num_negatives)
         return n_positions * k + n_positions * k * d
     if name == "ce_inbatch":
         return n_positions * n_positions + n_positions * d
     if name == "rece":
-        # n_chunks aligned chunks of (N/k) x (C/k): total N·C/k logits
-        k = 16
-        return n_positions * (catalog // k) + n_positions * d
+        # n_chunks aligned chunks of (N/k) × (C/k): the chunk-logit
+        # tensor (+1 column for the folded-back positive), the gathered
+        # chunk embeddings y_b AND their equal-sized VJP scatter
+        # cotangent, and the x_b/pos_emb gathers. Index/code vectors
+        # (O(N + C) ints) are omitted like everywhere else in this
+        # model — only float tensors count.
+        k = max(1, n_chunks)
+        cx, cy = n_positions // k, catalog // k
+        chunk_logits = k * cx * (cy + 1)
+        cand = 2 * k * cy * d  # y_b gather + its cotangent
+        x_gather = 2 * k * cx * d  # x_b + pos_emb
+        return chunk_logits + cand + x_gather
     if name == "sce":
         assert cfg is not None
         # Whole-pipeline model (selection scores + candidate gather and

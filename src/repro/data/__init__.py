@@ -2,6 +2,7 @@
 family, all driven by a deterministic, checkpointable cursor."""
 from repro.data.pipeline import Cursor, ShardedCursor, shard_batch
 from repro.data.sequences import SeqDataConfig, SequenceDataset
+from repro.data.longtail import LongTailConfig, LongTailDataset
 from repro.data.clickstream import ClickDataConfig, ClickstreamDataset
 from repro.data.graphs import (
     GraphDataConfig,
@@ -16,6 +17,8 @@ __all__ = [
     "shard_batch",
     "SeqDataConfig",
     "SequenceDataset",
+    "LongTailConfig",
+    "LongTailDataset",
     "ClickDataConfig",
     "ClickstreamDataset",
     "GraphDataConfig",

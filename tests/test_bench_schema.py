@@ -267,3 +267,99 @@ def test_lm_loss_json_schema(tmp_path):
         assert gc["passes_tolerances"], gc
         caps.add(gc["logit_softcap"])
     assert caps == {None, 30.0}
+
+
+def test_pareto_losses_json_schema(tmp_path):
+    """BENCH_pareto.json (ISSUE 9): the multi-loss Pareto sweep — every
+    registry loss × every catalog present, one constant row key set
+    (trajectory's schema check pins row key TUPLES), trained rows fully
+    measured, analytic-only rows with honest nulls, and the
+    machine-independent ``peak_elems_vs_naive`` column populated
+    everywhere (ce pinned to exactly 1.0)."""
+    doc = _run_bench(
+        tmp_path, "benchmarks.pareto_losses",
+        "--steps", "2", "--catalogs", "2000",
+        "--analytic-catalogs", "8000",
+    )
+    assert set(doc) == {"mode", "steps", "rows", "derived"}
+    assert doc["mode"] == "pareto-losses"
+    assert doc["steps"] == 2
+    assert isinstance(doc["derived"], str) and "ndcg sce/ce" in doc["derived"]
+    losses = {
+        "ce", "ce_chunked", "ce_fused_linear",
+        "bce_plus", "gbce", "ce_minus", "ce_pop", "rece", "sce",
+    }
+    rows = {r["label"]: r for r in doc["rows"]}
+    assert set(rows) == {
+        f"{l}@{c}" for l in losses for c in (2000, 8000)
+    }
+    key_sets = {tuple(sorted(r)) for r in doc["rows"]}
+    assert len(key_sets) == 1, key_sets  # constant schema for trajectory
+    spec = {
+        "label": str,
+        "loss": str,
+        "catalog": numbers.Integral,
+        "n_positions": numbers.Integral,
+        "d": numbers.Integral,
+        "analytic_only": bool,
+        "mem_elems": numbers.Integral,
+        "peak_elems_vs_naive": numbers.Real,
+    }
+    for label, row in rows.items():
+        _assert_row(row, spec, f"pareto[{label}]")
+        if row["analytic_only"]:
+            assert row["catalog"] == 8000
+            for k in ("ndcg@10", "hr@10", "positions_per_s",
+                      "train_time_s", "quality_impl"):
+                assert row[k] is None, (label, k)
+        else:
+            assert row["catalog"] == 2000
+            for k in ("ndcg@10", "hr@10", "positions_per_s", "train_time_s"):
+                assert isinstance(row[k], numbers.Real), (label, k)
+            assert row["positions_per_s"] > 0
+    # naive CE is its own yardstick; the streaming losses beat it
+    for c in (2000, 8000):
+        assert rows[f"ce@{c}"]["peak_elems_vs_naive"] == pytest.approx(1.0)
+        assert rows[f"rece@{c}"]["peak_elems_vs_naive"] < 1.0
+        assert rows[f"sce@{c}"]["peak_elems_vs_naive"] < 1.0
+    # the exact-CE family shares one honest quality run at smoke scale
+    assert rows["ce@2000"]["quality_impl"] == "ce"
+    assert rows["ce_chunked@2000"]["quality_impl"] == "ce"
+    assert (
+        rows["ce_chunked@2000"]["ndcg@10"] == rows["ce@2000"]["ndcg@10"]
+    )
+
+
+def test_pareto_alpha_beta_json_schema(tmp_path):
+    """BENCH_pareto_ab.json (ISSUE 9): the SCE (α, β) sweep on the
+    standard --steps/--json contract — full grid present, unique labels,
+    and the gated ``peak_elems_vs_naive`` ratio on every row."""
+    doc = _run_bench(
+        tmp_path, "benchmarks.pareto_alpha_beta", "--steps", "1"
+    )
+    assert set(doc) == {"mode", "steps", "rows", "derived"}
+    assert doc["mode"] == "pareto-alpha-beta"
+    assert doc["steps"] == 1
+    assert isinstance(doc["derived"], str) and "best" in doc["derived"]
+    rows = doc["rows"]
+    labels = [r["label"] for r in rows]
+    assert len(labels) == len(set(labels)) == 12  # 3 alpha × 2 beta × 2 b_y
+    spec = {
+        "label": str,
+        "alpha": numbers.Real,
+        "beta": numbers.Real,
+        "b_y": numbers.Integral,
+        "mem_elems": numbers.Integral,
+        "peak_elems_vs_naive": numbers.Real,
+        "ndcg@10": numbers.Real,
+    }
+    for row in rows:
+        _assert_row(row, spec, f"pareto_ab[{row.get('label')}]")
+        # honest ratio: heavy (alpha, beta) corners may legitimately
+        # EXCEED naive CE at this tiny catalog — only positivity is
+        # structural
+        assert row["peak_elems_vs_naive"] > 0, row["label"]
+    assert min(r["peak_elems_vs_naive"] for r in rows) < 1.0
+    assert {(r["alpha"], r["beta"]) for r in rows} == {
+        (a, b) for a in (1.0, 2.0, 4.0) for b in (1.0, 4.0)
+    }

@@ -206,11 +206,18 @@ def test_ce_pop_prefers_popular_negatives(key):
     # run the internal sampler via the loss (finite + deterministic)
     loss, _ = ce_pop(x, y, t, key=key, num_negatives=32, popularity=pop)
     assert np.isfinite(float(loss))
-    # direct check on the categorical draw
-    logp = jnp.log(pop)
-    draws = jax.random.categorical(key, logp[None, :], shape=(64, 32))
+    # direct check on the inverse-CDF draw (O(C) memory — the
+    # categorical-based sampler materialized (n, k, C) gumbels)
+    from repro.core.losses import _sample_popularity_negatives
+
+    draws = _sample_popularity_negatives(key, 64, 32, pop)
+    assert draws.shape == (64, 32) and draws.dtype == jnp.int32
     frac7 = float((draws == 7).mean())
     assert frac7 > 0.5  # ≫ 1/100
+    # zero-weight items are never drawn
+    pop0 = pop.at[0].set(0.0)
+    draws0 = _sample_popularity_negatives(key, 64, 32, pop0)
+    assert not bool((draws0 == 0).any())
 
 
 def test_rece_single_chunk_equals_ce(key):
@@ -235,3 +242,198 @@ def test_rece_partitions_every_position(key):
     g = jax.grad(lambda x: rece(x, y, t, key=key, n_chunks=8)[0])(x)
     touched = np.abs(np.asarray(g)).sum(axis=-1) > 0
     assert touched.all()  # partition covers every position
+
+
+# ---- ISSUE 9: config-faithful loss_peak_elements (the accounting fix) ----
+
+
+def test_peak_elements_ce_chunked_config_faithful():
+    """Regression: the accounting must use the CALLER's chunk_size, not a
+    hardcoded 8192 — at chunk_size=1024 the peak logit tile is N×1024."""
+    n, c, d = 512, 100_000, 16
+    assert loss_peak_elements("ce_chunked", n, c, d, chunk_size=1024) == n * 1024
+    assert loss_peak_elements("ce_chunked", n, c, d, chunk_size=4096) == n * 4096
+    # chunk larger than the catalog clamps to C (one chunk = dense row)
+    assert loss_peak_elements("ce_chunked", n, c, d, chunk_size=10**9) == n * c
+    # changing the config MUST change the answer (the old hardcode didn't)
+    assert loss_peak_elements(
+        "ce_chunked", n, c, d, chunk_size=1024
+    ) != loss_peak_elements("ce_chunked", n, c, d, chunk_size=4096)
+
+
+def test_peak_elements_rece_config_faithful():
+    """Regression: rece accounting at the caller's n_chunks, pinned to the
+    materialized-tensor sizes (chunk logits + y_b gather + its cotangent
+    + x_b/pos gathers) — not the old hardcoded k=16 logit-only count."""
+    n, c, d = 512, 100_000, 16
+    for k in (4, 16, 64):
+        cx, cy = n // k, c // k
+        want = k * cx * (cy + 1) + 2 * k * cy * d + 2 * k * cx * d
+        assert loss_peak_elements("rece", n, c, d, n_chunks=k) == want
+    assert loss_peak_elements(
+        "rece", n, c, d, n_chunks=4
+    ) != loss_peak_elements("rece", n, c, d, n_chunks=16)
+
+
+def test_peak_elements_sampled_and_blocked_config_faithful():
+    n, c, d = 512, 100_000, 16
+    # sampled family scales with num_negatives (logits + gathered embs)
+    for k in (8, 128):
+        want = n * k + n * k * d
+        for name in ("bce_plus", "gbce", "ce_minus", "ce_pop"):
+            assert loss_peak_elements(name, n, c, d, num_negatives=k) == want
+    # ce_fused_linear scales with its tile shape, not the catalog
+    assert loss_peak_elements(
+        "ce_fused_linear", n, c, d, block_n=64, block_c=128
+    ) == 4 * n + 64 * 128
+    # ce_fused is honest: forward-only fusion, dense autodiff backward
+    assert loss_peak_elements("ce_fused", n, c, d) == n * c
+
+
+def test_peak_elements_accepts_make_loss_kwargs_verbatim():
+    """A benchmark must be able to forward its make_loss kwargs dict
+    unchanged — memory-irrelevant kwargs (t, logit_softcap, popularity,
+    n_hashes) are accepted and ignored."""
+    n, c, d = 256, 50_000, 8
+    assert loss_peak_elements(
+        "gbce", n, c, d, num_negatives=8, t=0.75
+    ) == loss_peak_elements("gbce", n, c, d, num_negatives=8)
+    assert loss_peak_elements(
+        "ce_chunked", n, c, d, chunk_size=512, logit_softcap=30.0
+    ) == n * 512
+    assert loss_peak_elements(
+        "rece", n, c, d, n_chunks=8, n_hashes=12
+    ) == loss_peak_elements("rece", n, c, d, n_chunks=8)
+
+
+# ---- ISSUE 9: LSH code packing near the 32-bit boundary ----
+
+
+def test_lsh_codes_distinct_near_bit_boundary():
+    """n_hashes=32 sign patterns differing only in the TOP bits must map
+    to distinct codes (int32 packing shifted 1<<31 into the sign bit)."""
+    from repro.core.losses import lsh_codes
+
+    d = 32
+    planes = jnp.eye(d)  # hash h reads the sign of v[h]
+    base = -np.ones((1, d), np.float32)
+    rows = [base.copy()]
+    for h in (30, 31):
+        v = base.copy()
+        v[0, h] = 1.0
+        rows.append(v)
+    both = base.copy()
+    both[0, 30] = both[0, 31] = 1.0
+    rows.append(both)
+    codes = np.asarray(lsh_codes(jnp.asarray(np.concatenate(rows)), planes))
+    assert codes.dtype == np.uint32
+    assert len(set(codes.tolist())) == len(rows)  # all distinct
+    np.testing.assert_array_equal(
+        codes, np.array([0, 2**30, 2**31, 2**30 + 2**31], np.uint64)
+    )
+
+
+def test_lsh_codes_rejects_more_than_32_hashes(key):
+    from repro.core.losses import lsh_codes, rece
+
+    v = jax.random.normal(key, (4, 8))
+    planes = jax.random.normal(key, (8, 33))
+    with pytest.raises(ValueError):
+        lsh_codes(v, planes)
+    x, y, t = _problem(key, n=16, c=64)
+    with pytest.raises(ValueError):
+        rece(x, y, t, key=key, n_hashes=33)
+    with pytest.raises(ValueError):
+        rece(x, y, t, key=key, n_hashes=0)
+    # the full 32-hash budget runs and stays finite
+    loss, _ = rece(x, y, t, key=key, n_hashes=32, n_chunks=4)
+    assert np.isfinite(float(loss))
+
+
+# ---- ISSUE 9: rece truncation coverage surfaced in aux ----
+
+
+def test_rece_coverage_aux_divisible(key):
+    """Divisible N and C ⇒ nothing truncated: both fractions exactly 1."""
+    from repro.core.losses import rece
+
+    x, y, t = _problem(key, n=64, c=256)
+    _, aux = rece(x, y, t, key=key, n_chunks=8)
+    assert float(aux["covered_frac"]) == 1.0
+    assert float(aux["catalog_frac"]) == 1.0
+
+
+def test_rece_coverage_aux_nondivisible(key):
+    """N=65, n_chunks=8 drops one position; C=101 leaves a 5-item catalog
+    tail. aux must report both, and the dropped position must contribute
+    nothing (zero gradient row — the mean is over covered only)."""
+    from repro.core.losses import rece
+
+    x, y, t = _problem(key, n=65, c=101)
+    loss, aux = rece(x, y, t, key=key, n_chunks=8)
+    assert np.isfinite(float(loss))
+    np.testing.assert_allclose(float(aux["covered_frac"]), 64 / 65, rtol=1e-6)
+    cy = 101 // 8
+    np.testing.assert_allclose(
+        float(aux["catalog_frac"]), 8 * cy / 101, rtol=1e-6
+    )
+    g = jax.grad(lambda x: rece(x, y, t, key=key, n_chunks=8)[0])(x)
+    zero_rows = int((np.abs(np.asarray(g)).sum(axis=-1) == 0).sum())
+    assert zero_rows == 65 - 64
+    # catalog tail: items never gathered as negatives nor positives get
+    # zero gradient — at most 8·cy negative rows + |targets| positive rows
+    gy = jax.grad(lambda y: rece(x, y, t, key=key, n_chunks=8)[0])(y)
+    touched = int((np.abs(np.asarray(gy)).sum(axis=-1) > 0).sum())
+    assert touched <= 8 * cy + len(np.unique(np.asarray(t)))
+
+
+def test_rece_coverage_aux_respects_valid_mask(key):
+    """covered_frac is covered∩valid over valid — invalid positions are
+    not 'coverage' the loss could ever have."""
+    from repro.core.losses import rece
+
+    x, y, t = _problem(key, n=64, c=256)
+    vm = jnp.arange(64) < 40
+    _, aux = rece(x, y, t, valid_mask=vm, key=key, n_chunks=8)
+    # divisible N ⇒ the chunk cut covers everyone ⇒ covered∩valid = valid
+    np.testing.assert_allclose(float(aux["covered_frac"]), 1.0, rtol=1e-6)
+
+
+# ---- ISSUE 9: RECE exactness-limit differential (n_chunks=1) ----
+
+
+def test_rece_single_chunk_gradients_match_ce(key):
+    """n_chunks=1 is RECE's exactness limit: loss, dX AND dY must all
+    match naive full CE (positive fold-back + self-collision masking
+    included — a silent regression in either shows up here first)."""
+    from repro.core.losses import rece
+
+    x, y, t = _problem(key, n=32, c=100)
+
+    la, (dxa, dya) = jax.value_and_grad(
+        lambda x, y: ce(x, y, t)[0], argnums=(0, 1)
+    )(x, y)
+    lb, (dxb, dyb) = jax.value_and_grad(
+        lambda x, y: rece(x, y, t, key=key, n_chunks=1)[0], argnums=(0, 1)
+    )(x, y)
+    np.testing.assert_allclose(float(la), float(lb), rtol=1e-5)
+    np.testing.assert_allclose(dxa, dxb, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(dya, dyb, rtol=1e-4, atol=1e-6)
+
+
+def test_rece_single_chunk_gradients_match_ce_masked(key):
+    from repro.core.losses import rece
+
+    x, y, t = _problem(key, n=32, c=100)
+    vm = jnp.arange(32) < 20
+
+    la, (dxa, dya) = jax.value_and_grad(
+        lambda x, y: ce(x, y, t, valid_mask=vm)[0], argnums=(0, 1)
+    )(x, y)
+    lb, (dxb, dyb) = jax.value_and_grad(
+        lambda x, y: rece(x, y, t, valid_mask=vm, key=key, n_chunks=1)[0],
+        argnums=(0, 1),
+    )(x, y)
+    np.testing.assert_allclose(float(la), float(lb), rtol=1e-5)
+    np.testing.assert_allclose(dxa, dxb, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(dya, dyb, rtol=1e-4, atol=1e-6)

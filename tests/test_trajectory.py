@@ -147,3 +147,43 @@ def test_committed_baselines_parse():
         T.schema_of(payload)  # must not raise
         if f.name != "BENCH_metric_memory.json":
             assert T.extract_metrics(payload), f.name
+
+
+def test_explicit_label_wins_row_identity():
+    """Pareto rows repeat the same loss at several catalogs — an explicit
+    ``label`` key must name the metric, not the (colliding) loss key."""
+    assert T._row_label({"label": "sce@1000000", "loss": "sce"}, 0) == (
+        "sce@1000000"
+    )
+    assert T._row_label({"loss": "sce"}, 0) == "sce"
+    # labelled rows with identical losses stay distinct metrics
+    payload = {
+        "mode": "pareto-losses",
+        "derived": "x",
+        "rows": [
+            {"label": "sce@100000", "loss": "sce",
+             "peak_elems_vs_naive": 0.01},
+            {"label": "sce@1000000", "loss": "sce",
+             "peak_elems_vs_naive": 0.001},
+        ],
+    }
+    metrics = T.extract_metrics(payload)
+    assert set(metrics) == {
+        "sce@100000.peak_elems_vs_naive",
+        "sce@1000000.peak_elems_vs_naive",
+    }
+
+
+def test_labelled_pareto_regression_fails():
+    def payload(r2):
+        return {
+            "mode": "pareto-losses", "derived": "x",
+            "rows": [
+                {"label": "sce@100000", "peak_elems_vs_naive": 0.01},
+                {"label": "sce@1000000", "peak_elems_vs_naive": r2},
+            ],
+        }
+
+    assert T.compare(payload(0.002), payload(0.002), "f") == []
+    fails = T.compare(payload(0.004), payload(0.002), "f")
+    assert fails and "sce@1000000" in fails[0]

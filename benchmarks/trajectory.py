@@ -55,6 +55,15 @@ _RATIO_METRICS = {
     # gated, so a regression that sneaks a verify=False load into the
     # restore path fails CI structurally, not statistically.
     "unverified_loads": False,
+    # guard mode (kernels/guard): all four are zero-baseline gated.
+    # A kernel failing its conformance canaries, a preflight config
+    # escaping as an uncaught exception, a seeded non-finite the
+    # sentinels miss, or a sentinel tripping on a healthy loss is a
+    # structural regression, not noise.
+    "canary_failures": False,
+    "preflight_uncaught": False,
+    "sentinel_misses": False,
+    "sentinel_false_positives": False,
 }
 
 

@@ -54,6 +54,18 @@ def _mean_over_valid(per_pos: jax.Array, valid_mask: Optional[jax.Array]):
     return jnp.sum(per_pos * w) / jnp.maximum(jnp.sum(w), 1.0)
 
 
+def _sentinel_aux(kernel: str, per_pos, lse=None) -> Aux:
+    """Per-position numerics sentinels for a kernel-backed loss
+    (``kernels/guard/sentinels.py``), attached as ``aux["sentinels"]``
+    so the train step can report WHICH kernel went non-finite. Empty
+    under guard policy ``off`` (legacy aux shape)."""
+    from repro.kernels import guard
+
+    if guard.policy() == "off":
+        return {}
+    return {"sentinels": guard.loss_sentinels(kernel, per_pos, lse)}
+
+
 def ce(x, y, targets, valid_mask=None, key=None) -> Tuple[jax.Array, Aux]:
     """Full CE — materializes the (N, C) logit tensor (the memory hog)."""
     logits = x @ y.T  # (N, C)
@@ -117,7 +129,9 @@ def ce_chunked(
         logit_softcap,
     )
     per_pos = lse - pos
-    return _mean_over_valid(per_pos, valid_mask), {"lse": jnp.mean(lse)}
+    aux: Aux = {"lse": jnp.mean(lse)}
+    aux.update(_sentinel_aux("ce_chunked", per_pos, lse))
+    return _mean_over_valid(per_pos, valid_mask), aux
 
 
 def ce_fused(x, y, targets, valid_mask=None, key=None) -> Tuple[jax.Array, Aux]:
@@ -125,7 +139,9 @@ def ce_fused(x, y, targets, valid_mask=None, key=None) -> Tuple[jax.Array, Aux]:
     from repro.kernels import ops as _kops
 
     per_pos = _kops.fused_ce_loss(x, y, targets)
-    return _mean_over_valid(per_pos, valid_mask), {}
+    return _mean_over_valid(per_pos, valid_mask), _sentinel_aux(
+        "fused_ce", per_pos
+    )
 
 
 def ce_fused_linear(
@@ -145,7 +161,9 @@ def ce_fused_linear(
         x, y, targets, logit_softcap=logit_softcap,
         block_n=block_n, block_c=block_c,
     )
-    return _mean_over_valid(per_pos, valid_mask), {}
+    return _mean_over_valid(per_pos, valid_mask), _sentinel_aux(
+        "linear_sce", per_pos
+    )
 
 
 def _sample_negatives(key, n, k, catalog):

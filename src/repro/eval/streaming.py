@@ -27,7 +27,10 @@ rule):
   * ``impl="ref"``    — the jit-compiled chunked ``kernels/ref.py``
     scan (the fast CPU path and the path used inside ``shard_map``).
 
-``impl="auto"`` picks the kernel on TPU and the reference elsewhere.
+``impl="auto"`` picks the kernel on TPU and the reference elsewhere —
+and on TPU it first consults the guard's conformance verdict for
+``eval_fused`` (``kernels/guard``): a kernel that failed its canaries
+on the running backend resolves to the exact reference path instead.
 """
 from __future__ import annotations
 
@@ -39,6 +42,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
+
+
+def guard_mod():
+    """Late import of ``repro.kernels.guard`` (kept out of module scope
+    so monkeypatching ``guard.kernel_enabled`` in drills is seen here)."""
+    from repro.kernels import guard
+
+    return guard
 
 
 # ---------------------------------------------------------------------------
@@ -111,6 +122,11 @@ def streaming_eval_scores(
     """
     if impl == "auto":
         impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+        if impl == "kernel" and not guard_mod().kernel_enabled("eval_fused"):
+            # Conformance canaries failed for the fused eval kernel on
+            # this backend (guard policy "warn" already warned loudly) —
+            # resolve "auto" to the exact chunked reference instead.
+            impl = "ref"
     if impl == "ref":
         c_hi_static = (
             id_offset + y.shape[0] if c_hi is None else c_hi

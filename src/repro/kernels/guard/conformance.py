@@ -1,0 +1,530 @@
+"""On-backend conformance canaries: kernel vs chunked-ref oracle
+(KERNELS.md §Guard).
+
+Every Pallas kernel in this repo carries a small registry of
+ADVERSARIAL differential cases — the exact shapes the ROADMAP's
+Mosaic-validation item worries about:
+
+  * tie-heavy duplicate catalog rows (top-k tie order: lower global id
+    must win),
+  * ``C % block`` tails (the padded last tile must stay masked),
+  * starvation ``C < k`` (merge buffers larger than the catalog),
+  * duplicate-row gather-indexed dY RMW (the ``sce_prefetch``
+    ``input_output_aliases`` accumulation revisit),
+  * softcap-active logit scales (the in-tile ``cap·tanh`` path).
+
+Each canary executes the REAL kernel entry point on the current
+backend (Mosaic on TPU, interpret elsewhere) and compares against the
+pure-jnp ``kernels/ref.py`` oracle. A kernel that raises (a Mosaic
+miscompile surfacing as an exception) or diverges numerically FAILS
+its canary; the per-``(backend, interpret)`` verdict is memoized and
+consulted by every ``kernels/ops.py`` dispatch, which degrades that
+kernel to its ref path with a loud warning instead of crashing or
+silently miscomputing.
+
+Canaries resolve the kernel entry point by MODULE ATTRIBUTE at call
+time (``_mod().fn(...)``), so a monkeypatched/broken kernel — the
+fault-injection drills in ``tests/test_guard.py`` — is genuinely
+exercised, not a captured healthy reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+_ATOL = 2e-4
+_RTOL = 2e-4
+
+_SEED = 0xCA9A  # canary inputs are deterministic per case
+
+
+class KernelConformanceError(RuntimeError):
+    """Strict-policy failure: a kernel's conformance canaries failed on
+    this backend and the guard policy forbids silent degradation."""
+
+    def __init__(self, kernel: str, backend_key, failures):
+        msg = (
+            f"[guard.conformance] kernel {kernel!r} FAILED conformance on "
+            f"backend {backend_key}: " + "; ".join(failures)
+        )
+        super().__init__(msg)
+        self.kernel = kernel
+        self.failures = tuple(failures)
+
+
+@dataclasses.dataclass(frozen=True)
+class Verdict:
+    """Outcome of one kernel's canary suite on one backend."""
+
+    kernel: str
+    backend: str
+    interpret: bool
+    n_pass: int
+    n_fail: int
+    failures: Tuple[str, ...]
+
+    @property
+    def passed(self) -> bool:
+        return self.n_fail == 0
+
+    def to_dict(self) -> Dict:
+        return {
+            "kernel": self.kernel,
+            "backend": self.backend,
+            "interpret": self.interpret,
+            "passed": self.passed,
+            "n_pass": self.n_pass,
+            "n_fail": self.n_fail,
+            "failures": list(self.failures),
+        }
+
+
+_CANARIES: Dict[str, List[Tuple[str, Callable[[bool], None]]]] = {}
+_VERDICTS: Dict[Tuple[str, bool, str], Verdict] = {}
+_LOCK = threading.RLock()
+
+
+def _canary(kernel: str, name: str):
+    def register(fn):
+        _CANARIES.setdefault(kernel, []).append((name, fn))
+        return fn
+
+    return register
+
+
+def _default_interpret() -> bool:
+    from repro.kernels import ops as _ops
+
+    return _ops._interpret_default()
+
+
+def _backend_name() -> str:
+    import jax
+
+    return jax.default_backend()
+
+
+def kernels() -> Tuple[str, ...]:
+    """Kernel names with a registered canary suite."""
+    return tuple(sorted(_CANARIES))
+
+
+def clear_verdicts(kernel: Optional[str] = None) -> None:
+    """Drop memoized verdicts (all, or one kernel's) — the hook the
+    fault-injection drills and post-fix readiness refreshes use."""
+    with _LOCK:
+        if kernel is None:
+            _VERDICTS.clear()
+        else:
+            for key in [k for k in _VERDICTS if k[2] == kernel]:
+                del _VERDICTS[key]
+
+
+def _run_canary_clean(fn, interpret: bool) -> Optional[BaseException]:
+    """Run one canary on a FRESH thread and return its exception (or
+    ``None`` on pass).
+
+    A kernel's first guarded dispatch can happen while an outer
+    jit/remat trace is active; JAX's trace state is thread-local, so a
+    worker thread gives the canary a clean eager context — its concrete
+    constants can't be lifted into the caller's trace (which would
+    produce tracer-leak "failures" that have nothing to do with the
+    kernel under test).
+    """
+    box: List[Optional[BaseException]] = [None]
+
+    def worker():
+        try:
+            fn(interpret)
+        except BaseException as e:  # noqa: BLE001 — a crash IS a verdict
+            box[0] = e
+
+    t = threading.Thread(target=worker, name="guard-canary", daemon=True)
+    t.start()
+    t.join()
+    return box[0]
+
+
+def verdict_for(kernel: str, *, interpret: Optional[bool] = None) -> Verdict:
+    """Memoized canary verdict for ``kernel`` on the current backend.
+
+    The first call per ``(backend, interpret, kernel)`` actually runs
+    the canaries (small concrete inputs — safe even when reached from
+    inside an outer trace); later calls are a dict lookup.
+    """
+    if kernel not in _CANARIES:
+        raise KeyError(
+            f"no conformance canaries registered for kernel {kernel!r} "
+            f"(known: {', '.join(kernels())})"
+        )
+    if interpret is None:
+        interpret = _default_interpret()
+    backend = _backend_name()
+    key = (backend, bool(interpret), kernel)
+    with _LOCK:
+        v = _VERDICTS.get(key)
+        if v is not None:
+            return v
+        n_pass, failures = 0, []
+        for name, fn in _CANARIES[kernel]:
+            err = _run_canary_clean(fn, bool(interpret))
+            if err is None:
+                n_pass += 1
+            else:
+                failures.append(f"{name}: {type(err).__name__}: {err}")
+        v = Verdict(kernel=kernel, backend=backend,
+                    interpret=bool(interpret), n_pass=n_pass,
+                    n_fail=len(failures), failures=tuple(failures))
+        _VERDICTS[key] = v
+        return v
+
+
+def run_conformance(
+    which: Optional[Tuple[str, ...]] = None,
+    *,
+    interpret: Optional[bool] = None,
+    refresh: bool = False,
+) -> Dict[str, Verdict]:
+    """Run (or fetch memoized) canary suites → ``{kernel: Verdict}``.
+
+    The startup/CI entry point: ``launch/serve.py`` runs it as a
+    readiness gate, ``kernel_bench --mode guard`` snapshots it into
+    ``BENCH_guard.json``.
+    """
+    names = tuple(which) if which else kernels()
+    if refresh:
+        for k in names:
+            clear_verdicts(k)
+    return {k: verdict_for(k, interpret=interpret) for k in names}
+
+
+def verdict_table() -> List[Dict]:
+    """JSON-ready snapshot of every memoized verdict (health endpoint /
+    bench artifact format)."""
+    with _LOCK:
+        return [v.to_dict() for _, v in sorted(_VERDICTS.items())]
+
+
+# ---------------------------------------------------------------------------
+# Canary input builders
+# ---------------------------------------------------------------------------
+def _rng(salt: int) -> np.random.Generator:
+    return np.random.default_rng(_SEED + salt)
+
+
+def _assert_close(name: str, got, want, atol=_ATOL, rtol=_RTOL):
+    got, want = np.asarray(got), np.asarray(want)
+    if got.shape != want.shape:
+        raise AssertionError(
+            f"{name}: shape {got.shape} != oracle {want.shape}"
+        )
+    if not np.allclose(got, want, atol=atol, rtol=rtol, equal_nan=True):
+        err = float(np.max(np.abs(got - want)))
+        raise AssertionError(
+            f"{name}: max abs err {err:.3e} vs oracle (atol={atol})"
+        )
+
+
+def _assert_ids(name: str, got, want):
+    got, want = np.asarray(got), np.asarray(want)
+    if got.shape != want.shape or not np.array_equal(got, want):
+        raise AssertionError(f"{name}: id/tie-order mismatch vs oracle")
+
+
+def _sce_inputs(salt: int, n_b=2, b_x=5, b_y=7, d=8, c=16, softcap=None):
+    """Adversarial SCE bucket inputs: non-multiple b_x/b_y (block
+    tails), padding slots (cand_id −1), target-collision candidates."""
+    import jax.numpy as jnp
+
+    r = _rng(salt)
+    scale = 4.0 if softcap else 1.0  # softcap-active logit magnitudes
+    x_b = jnp.asarray(r.normal(size=(n_b, b_x, d)) * scale, jnp.float32)
+    y = jnp.asarray(r.normal(size=(c, d)), jnp.float32)
+    tgt_b = jnp.asarray(r.integers(0, c, size=(n_b, b_x)), jnp.int32)
+    idx = r.integers(0, c, size=(n_b, b_y))
+    idx[:, 1] = idx[:, 0]  # duplicate-row revisit inside one bucket
+    cand_ids = idx.astype(np.int32)
+    cand_ids[:, -1] = -1  # padding slot
+    cand_ids[0, 2] = int(tgt_b[0, 0])  # forced target collision
+    cand_ids = jnp.asarray(cand_ids)
+    idx_y = jnp.asarray(np.maximum(np.asarray(cand_ids), 0), jnp.int32)
+    pos = jnp.einsum(
+        "nxd,nxd->nx", x_b,
+        jnp.take(y, tgt_b.reshape(-1), axis=0).reshape(n_b, b_x, d),
+    ).astype(jnp.float32)
+    if softcap:
+        pos = softcap * jnp.tanh(pos / softcap)
+    y_b = jnp.take(y, idx_y.reshape(-1), axis=0).reshape(n_b, b_y, d)
+    return x_b, y, y_b, idx_y, tgt_b, cand_ids, pos
+
+
+def _mod(name: str):
+    # Resolved at CALL time so monkeypatched kernels are what runs.
+    import importlib
+
+    return importlib.import_module(f"repro.kernels.{name}")
+
+
+# -- sce_bucket --------------------------------------------------------------
+@_canary("sce_bucket", "tail_collisions_softcap")
+def _sce_bucket_loss_canary(interpret: bool):
+    from repro.kernels import ref
+
+    for softcap in (None, 5.0):
+        x_b, _, y_b, _, tgt_b, cand_ids, pos = _sce_inputs(
+            1, softcap=softcap
+        )
+        got = _mod("sce_bucket").sce_bucket_loss(
+            x_b, y_b, tgt_b, cand_ids, pos, 4, 4, interpret, softcap
+        )
+        want = ref.sce_bucket_loss_ref(
+            x_b, y_b, tgt_b, cand_ids, pos, softcap
+        )
+        _assert_close(f"loss(softcap={softcap})", got, want)
+
+
+@_canary("sce_bucket", "plse_grad")
+def _sce_bucket_plse_canary(interpret: bool):
+    import jax
+
+    from repro.kernels import ref
+
+    x_b, _, y_b, _, tgt_b, cand_ids, _ = _sce_inputs(2)
+    got = _mod("sce_bucket").sce_bucket_plse(
+        x_b, y_b, tgt_b, cand_ids, 4, 4, interpret, None
+    )
+    want = ref.sce_bucket_plse_ref(x_b, y_b, tgt_b, cand_ids, None)
+    _assert_close("plse", got, want)
+
+    def k_loss(xb):
+        return _mod("sce_bucket").sce_bucket_loss(
+            xb, y_b, tgt_b, cand_ids,
+            jax.numpy.zeros(tgt_b.shape, jax.numpy.float32),
+            4, 4, interpret, None,
+        ).sum()
+
+    def r_loss(xb):
+        return ref.sce_bucket_loss_ref(
+            xb, y_b, tgt_b, cand_ids,
+            jax.numpy.zeros(tgt_b.shape, jax.numpy.float32), None,
+        ).sum()
+
+    _assert_close("dX", jax.grad(k_loss)(x_b), jax.grad(r_loss)(x_b),
+                  atol=1e-3, rtol=1e-3)
+
+
+# -- sce_gather (scalar-prefetch candidate gather + dY RMW) ------------------
+@_canary("sce_gather", "duplicate_row_rmw")
+def _sce_gather_canary(interpret: bool):
+    import jax
+
+    from repro.kernels import ref
+
+    x_b, y, _, idx_y, tgt_b, cand_ids, pos = _sce_inputs(3)
+    got = _mod("sce_prefetch").sce_gather_loss(
+        x_b, y, idx_y, tgt_b, cand_ids, pos, 4, 4, interpret, None
+    )
+    want = ref.sce_bucket_loss_ref(
+        x_b,
+        jax.numpy.take(y, idx_y.reshape(-1), axis=0).reshape(
+            idx_y.shape + (y.shape[-1],)
+        ),
+        tgt_b, cand_ids, pos, None,
+    )
+    _assert_close("gather_loss", got, want)
+
+    # The RMW revisit: dY accumulated straight into (C, d) through
+    # duplicated gather indices must equal the materialized-gather
+    # oracle's scatter-add.
+    def k_loss(yy):
+        return _mod("sce_prefetch").sce_gather_loss(
+            x_b, yy, idx_y, tgt_b, cand_ids, pos, 4, 4, interpret, None
+        ).sum()
+
+    def r_loss(yy):
+        y_b = jax.numpy.take(yy, idx_y.reshape(-1), axis=0).reshape(
+            idx_y.shape + (yy.shape[-1],)
+        )
+        return ref.sce_bucket_loss_ref(
+            x_b, y_b, tgt_b, cand_ids, pos, None
+        ).sum()
+
+    _assert_close("dY_rmw", jax.grad(k_loss)(y), jax.grad(r_loss)(y),
+                  atol=1e-3, rtol=1e-3)
+
+
+@_canary("sce_gather", "plse_tail")
+def _sce_gather_plse_canary(interpret: bool):
+    from repro.kernels import ref
+
+    x_b, y, y_b, idx_y, tgt_b, cand_ids, _ = _sce_inputs(4, b_y=9)
+    got = _mod("sce_prefetch").sce_gather_plse(
+        x_b, y, idx_y, tgt_b, cand_ids, 4, 4, interpret, None
+    )
+    want = ref.sce_bucket_plse_ref(x_b, y_b, tgt_b, cand_ids, None)
+    _assert_close("gather_plse", got, want)
+
+
+# -- mips_topk ---------------------------------------------------------------
+@_canary("mips_topk", "tie_duplicates_tail")
+def _mips_ties_canary(interpret: bool):
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+
+    r = _rng(10)
+    base = r.normal(size=(5, 8)).astype(np.float32)
+    # Tie-heavy catalog: every row duplicated, C=10 with block 4 → tail
+    # of 2; ties must resolve toward the LOWER global id in both paths.
+    y = jnp.asarray(np.repeat(base, 2, axis=0))
+    q = jnp.asarray(r.normal(size=(6, 8)).astype(np.float32))
+    got_v, got_i = _mod("mips_topk").mips_topk(
+        q, y, 4, block_q=4, block_c=4, interpret=interpret
+    )
+    want_v, want_i = ref.mips_topk_ref(q, y, 4, chunk=4)
+    _assert_ids("topk_ids", got_i, want_i)
+    _assert_close("topk_vals", got_v, want_v)
+
+
+@_canary("mips_topk", "starvation_valid_offset")
+def _mips_starved_canary(interpret: bool):
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+
+    r = _rng(11)
+    q = jnp.asarray(r.normal(size=(3, 8)).astype(np.float32))
+    y = jnp.asarray(r.normal(size=(3, 8)).astype(np.float32))
+    valid = jnp.asarray([True, False, True])
+    # k=8 > C=3 (starved merge buffer) + masked row + nonzero id base.
+    got_v, got_i = _mod("mips_topk").mips_topk(
+        q, y, 8, valid=valid, block_q=2, block_c=2, id_offset=7,
+        interpret=interpret,
+    )
+    want_v, want_i = ref.mips_topk_ref(
+        q, y, 8, valid=valid, chunk=2, id_offset=7
+    )
+    _assert_ids("starved_ids", got_i, want_i)
+    _assert_close("starved_vals", got_v, want_v)
+
+
+# -- fused_ce ----------------------------------------------------------------
+@_canary("fused_ce", "lse_and_loss_tail")
+def _fused_ce_canary(interpret: bool):
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+
+    r = _rng(20)
+    x = jnp.asarray(r.normal(size=(6, 8)).astype(np.float32))
+    y = jnp.asarray(r.normal(size=(11, 8)).astype(np.float32))  # C%4=3
+    tgt = jnp.asarray(r.integers(0, 11, size=(6,)), jnp.int32)
+    got = _mod("fused_ce").fused_lse(x, y, 4, 4, interpret)
+    _assert_close("fused_lse", got, ref.fused_lse_ref(x, y))
+    got = _mod("fused_ce").fused_ce_loss(x, y, tgt, 4, 4, interpret)
+    _assert_close("fused_ce_loss", got, ref.fused_ce_loss_ref(x, y, tgt))
+
+
+# -- linear_sce --------------------------------------------------------------
+@_canary("linear_sce", "softcap_value_and_grads")
+def _linear_sce_canary(interpret: bool):
+    import jax
+
+    from repro.kernels import ref
+
+    r = _rng(30)
+    x = jax.numpy.asarray(r.normal(size=(6, 8)).astype(np.float32) * 3)
+    w = jax.numpy.asarray(r.normal(size=(13, 8)).astype(np.float32))
+    tgt = jax.numpy.asarray(r.integers(0, 13, size=(6,)),
+                            jax.numpy.int32)
+    cap = 4.0  # softcap-active scales
+
+    def k_loss(xx, ww):
+        return _mod("linear_sce").linear_ce_loss(
+            xx, ww, tgt, cap, 4, 4, interpret
+        ).sum()
+
+    def r_loss(xx, ww):
+        return ref.linear_ce_loss_ref(
+            xx, ww, tgt, logit_softcap=cap, chunk=4
+        ).sum()
+
+    (gl, (gdx, gdw)) = jax.value_and_grad(k_loss, argnums=(0, 1))(x, w)
+    (wl, (wdx, wdw)) = jax.value_and_grad(r_loss, argnums=(0, 1))(x, w)
+    _assert_close("linear_ce", gl, wl)
+    _assert_close("linear_dx", gdx, wdx, atol=1e-3, rtol=1e-3)
+    _assert_close("linear_dw", gdw, wdw, atol=1e-3, rtol=1e-3)
+
+
+# -- eval_fused --------------------------------------------------------------
+@_canary("eval_fused", "ties_window_lse")
+def _eval_fused_canary(interpret: bool):
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+
+    r = _rng(40)
+    base = r.normal(size=(7, 8)).astype(np.float32)
+    y = jnp.asarray(np.concatenate([base, base[:3]], axis=0))  # C=10 ties
+    x = jnp.asarray(r.normal(size=(5, 8)).astype(np.float32))
+    tgt = jnp.asarray(r.integers(1, 9, size=(5,)), jnp.int32)
+    kw = dict(block_c=4, c_lo=1, c_hi=9, with_lse=True)
+    got = _mod("eval_fused").eval_fused(
+        x, y, tgt, 4, block_b=4, interpret=interpret, **kw
+    )
+    want = ref.eval_fused_ref(x, y, tgt, 4, chunk=4, c_lo=1, c_hi=9,
+                              with_lse=True)
+    for name, g, w in zip(("vals", "gt", "eq", "tgt", "m", "s"),
+                          (got[0],) + got[2:], (want[0],) + want[2:]):
+        _assert_close(f"eval_{name}", g, w)
+    _assert_ids("eval_ids", got[1], want[1])
+
+
+@_canary("eval_fused", "tgt_gather_bitwise")
+def _eval_tgt_gather_canary(interpret: bool):
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+
+    r = _rng(41)
+    x = jnp.asarray(r.normal(size=(5, 8)).astype(np.float32))
+    y = jnp.asarray(r.normal(size=(10, 8)).astype(np.float32))
+    tgt = jnp.asarray(r.integers(0, 10, size=(5,)), jnp.int32)
+    got = _mod("eval_fused").eval_tgt_gather(
+        x, y, tgt, block_b=4, block_c=4, interpret=interpret
+    )
+    want = ref.eval_tgt_gather_ref(x, y, tgt, chunk=4)
+    # The same-shape-gemm contract is BITWISE — the one Mosaic
+    # assumption the ROADMAP flags; zero tolerance here is the point.
+    _assert_close("tgt_gather", got, want, atol=0.0, rtol=0.0)
+
+
+# -- eval_topk (deprecated two-pass oracle entry points) ---------------------
+@_canary("eval_topk", "two_pass_ties")
+def _eval_topk_canary(interpret: bool):
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+
+    r = _rng(50)
+    base = r.normal(size=(6, 8)).astype(np.float32)
+    y = jnp.asarray(np.concatenate([base, base[:2]], axis=0))  # C=8
+    x = jnp.asarray(r.normal(size=(4, 8)).astype(np.float32))
+    tgt = jnp.asarray(r.integers(0, 8, size=(4,)), jnp.int32)
+    ts_got = _mod("eval_topk").eval_tgt_scores(
+        x, y, tgt, block_b=4, block_c=4, interpret=interpret
+    )
+    ts_want = ref.eval_tgt_scores_ref(x, y, tgt, chunk=4)
+    _assert_close("tgt_scores", ts_got, ts_want, atol=0.0, rtol=0.0)
+    got = _mod("eval_topk").eval_topk(
+        x, y, ts_got, 3, block_b=4, block_c=4, interpret=interpret
+    )
+    want = ref.eval_topk_ref(x, y, ts_want, 3, chunk=4)
+    _assert_ids("two_pass_ids", got[1], want[1])
+    for name, g, w in zip(("vals", "gt", "eq"),
+                          (got[0], got[2], got[3]),
+                          (want[0], want[2], want[3])):
+        _assert_close(f"two_pass_{name}", g, w)

@@ -1,0 +1,66 @@
+"""On-device numerics sentinels (KERNELS.md §Guard).
+
+Cheap i32 counters computed from quantities the loss kernels already
+produce (per-position losses; the online-LSE carry), threaded through
+the loss aux → step metrics → ``launch/train.py``'s divergence guard.
+When a step strikes, the host can name WHICH kernel went non-finite
+instead of only seeing a NaN scalar:
+
+    [guard] step 12: ... (sentinels: linear_sce_nonfinite=96)
+
+Counter names are static strings (``{kernel}_{what}``), so the dict is
+a fixed pytree under ``jit`` — the counts ride the same device→host
+transfer the loss already pays.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+# Matches kernels' masked-logit floor; an LSE at (or below) half of it
+# means every candidate was masked out — a starved/degenerate row.
+NEG_INF = -1e30
+_DEGENERATE_LSE = NEG_INF / 2
+
+
+def loss_sentinels(
+    kernel: str,
+    per_pos: jax.Array,
+    lse: Optional[jax.Array] = None,
+) -> Dict[str, jax.Array]:
+    """Sentinel counters for one kernel's loss output.
+
+    ``per_pos`` is the per-position loss (any shape; a scalar works);
+    ``lse`` optionally the per-position logsumexp for degenerate-row
+    detection. Returns ``{f"{kernel}_nonfinite": i32[, f"{kernel}_
+    degenerate_lse": i32]}`` — on-device scalars, zero on healthy
+    steps.
+    """
+    per_pos = jnp.asarray(per_pos)
+    out = {
+        f"{kernel}_nonfinite":
+            jnp.sum(~jnp.isfinite(per_pos)).astype(jnp.int32)
+    }
+    if lse is not None:
+        out[f"{kernel}_degenerate_lse"] = jnp.sum(
+            jnp.asarray(lse) <= _DEGENERATE_LSE
+        ).astype(jnp.int32)
+    return out
+
+
+def merge_sentinels(*dicts: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Sum counter dicts key-wise (microbatch / multi-loss accumulation)."""
+    out: Dict[str, jax.Array] = {}
+    for d in dicts:
+        for k, v in d.items():
+            out[k] = out[k] + v if k in out else v
+    return out
+
+
+def describe_sentinels(counts: Dict) -> str:
+    """Host-side: ``"linear_sce_nonfinite=96"`` for every tripped
+    counter (empty string when all clear)."""
+    hits = [f"{k}={int(v)}" for k, v in sorted(counts.items()) if int(v)]
+    return ", ".join(hits)

@@ -3,10 +3,26 @@
 On CPU (this container) the kernels execute in ``interpret=True`` mode —
 the kernel body runs as traced JAX ops for bit-accurate validation. On a
 real TPU backend they compile to Mosaic.
+
+Every production dispatch here is guarded (``kernels/guard``, policy
+``REPRO_GUARD`` ∈ {off, warn, strict}, default warn):
+
+  * block configs run through ``guard.checked_blocks`` — analytic
+    legality + VMEM preflight with auto-repair, or a structured
+    ``KernelPreflightError`` instead of a deep Mosaic failure;
+  * the kernel branch consults ``guard.kernel_enabled`` — the memoized
+    per-(backend, kernel) conformance-canary verdict; a kernel that
+    fails its canaries on this backend DEGRADES to the chunked
+    ``ref.py`` path with a loud warning instead of crashing or
+    silently miscomputing.
+
+``REPRO_FORCE_INTERPRET=1`` forces interpret mode on any backend (the
+kernel-body debugging escape hatch).
 """
 from __future__ import annotations
 
 import functools
+import os
 import warnings
 
 import jax
@@ -15,6 +31,7 @@ import jax.numpy as jnp
 from repro.kernels import eval_fused as _eval_fused
 from repro.kernels import eval_topk as _eval_topk
 from repro.kernels import fused_ce as _fused_ce
+from repro.kernels import guard as _guard
 from repro.kernels import linear_sce as _linear_sce
 from repro.kernels import mips_topk as _mips_topk
 from repro.kernels import ref as _ref
@@ -28,9 +45,41 @@ _TWO_PASS_DEPRECATION = (
     "as the oracle for the fused path's differential tests."
 )
 
+_gpu_interpret_warned = False
+
+
+@functools.lru_cache(maxsize=1)
+def _default_backend() -> str:
+    """Memoized backend probe — ``jax.default_backend()`` initializes
+    the platform on first call; every dispatch afterwards is a cached
+    string."""
+    return jax.default_backend()
+
+
+def _interpret_for_backend(backend: str) -> bool:
+    """Interpret-mode decision for a named backend: Mosaic on TPU,
+    interpret everywhere else — with the GPU case explicit (no
+    Mosaic-GPU lowering is wired up; falling to interpret there is
+    loudly announced once rather than silently assumed)."""
+    global _gpu_interpret_warned
+    if backend == "tpu":
+        return False
+    if backend == "gpu" and not _gpu_interpret_warned:
+        _gpu_interpret_warned = True
+        warnings.warn(
+            "[kernels.ops] GPU backend detected but no Mosaic-GPU "
+            "lowering is wired up — Pallas kernels run in interpret "
+            "mode (exact, SLOW). Pass interpret=False explicitly once "
+            "a GPU lowering lands.",
+            RuntimeWarning, stacklevel=3,
+        )
+    return True
+
 
 def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+    if os.environ.get("REPRO_FORCE_INTERPRET") == "1":
+        return True
+    return _interpret_for_backend(_default_backend())
 
 
 def _inside_shard_map(*arrays) -> bool:
@@ -69,6 +118,15 @@ def sce_bucket_loss(
         return _ref.sce_bucket_loss_ref(
             x_b, y_b, tgt_b, cand_ids, pos_logit, logit_softcap
         )
+    block_bx, block_by = _guard.checked_blocks(
+        "sce_bucket", rows=x_b.shape[1], cols=y_b.shape[1],
+        d=x_b.shape[-1], block_rows=block_bx, block_cols=block_by,
+        dtype=x_b.dtype,
+    )
+    if not _guard.kernel_enabled("sce_bucket", interpret=interpret):
+        return _ref.sce_bucket_loss_ref(
+            x_b, y_b, tgt_b, cand_ids, pos_logit, logit_softcap
+        )
     return _sce_bucket.sce_bucket_loss(
         x_b, y_b, tgt_b, cand_ids, pos_logit, block_bx, block_by, interpret,
         logit_softcap,
@@ -90,6 +148,15 @@ def sce_bucket_plse(
     if interpret is None:
         interpret = _interpret_default()
     if interpret and _inside_shard_map(x_b, y_b):
+        return _ref.sce_bucket_plse_ref(
+            x_b, y_b, tgt_b, cand_ids, logit_softcap
+        )
+    block_bx, block_by = _guard.checked_blocks(
+        "sce_bucket", rows=x_b.shape[1], cols=y_b.shape[1],
+        d=x_b.shape[-1], block_rows=block_bx, block_cols=block_by,
+        dtype=x_b.dtype,
+    )
+    if not _guard.kernel_enabled("sce_bucket", interpret=interpret):
         return _ref.sce_bucket_plse_ref(
             x_b, y_b, tgt_b, cand_ids, logit_softcap
         )
@@ -128,6 +195,14 @@ def mips_topk(
         return _ref.mips_topk_ref(
             q, y, k, valid=valid, chunk=block_c, id_offset=id_offset
         )
+    block_q, block_c = _guard.checked_blocks(
+        "mips_topk", rows=q.shape[0], cols=y.shape[0], d=q.shape[-1],
+        block_rows=block_q, block_cols=block_c, dtype=q.dtype, k=k,
+    )
+    if not _guard.kernel_enabled("mips_topk", interpret=interpret):
+        return _ref.mips_topk_ref(
+            q, y, k, valid=valid, chunk=block_c, id_offset=id_offset
+        )
     return _mips_topk.mips_topk(
         q, y, k,
         valid=valid, block_q=block_q, block_c=block_c,
@@ -158,11 +233,22 @@ def sce_gather_loss(
     must arrive already capped."""
     if interpret is None:
         interpret = _interpret_default()
-    if interpret and _inside_shard_map(x_b, y, pos_logit):
+
+    def _ref_path():
         y_b = jnp.take(y, jnp.clip(idx_y, 0, y.shape[0] - 1), axis=0)
         return _ref.sce_bucket_loss_ref(
             x_b, y_b, tgt_b, cand_ids, pos_logit, logit_softcap
         )
+
+    if interpret and _inside_shard_map(x_b, y, pos_logit):
+        return _ref_path()
+    block_bx, block_by = _guard.checked_blocks(
+        "sce_gather", rows=x_b.shape[1], cols=idx_y.shape[1],
+        d=x_b.shape[-1], block_rows=block_bx, block_cols=block_by,
+        dtype=x_b.dtype,
+    )
+    if not _guard.kernel_enabled("sce_gather", interpret=interpret):
+        return _ref_path()
     return _sce_prefetch.sce_gather_loss(
         x_b, y, idx_y, tgt_b, cand_ids, pos_logit,
         block_bx, block_by, interpret, logit_softcap,
@@ -188,9 +274,22 @@ def sce_gather_plse(
     :func:`sce_gather_loss`."""
     if interpret is None:
         interpret = _interpret_default()
-    if interpret and _inside_shard_map(x_b, y):
+
+    def _ref_path():
         y_b = jnp.take(y, jnp.clip(idx_y, 0, y.shape[0] - 1), axis=0)
-        return _ref.sce_bucket_plse_ref(x_b, y_b, tgt_b, cand_ids, logit_softcap)
+        return _ref.sce_bucket_plse_ref(
+            x_b, y_b, tgt_b, cand_ids, logit_softcap
+        )
+
+    if interpret and _inside_shard_map(x_b, y):
+        return _ref_path()
+    block_bx, block_by = _guard.checked_blocks(
+        "sce_gather", rows=x_b.shape[1], cols=idx_y.shape[1],
+        d=x_b.shape[-1], block_rows=block_bx, block_cols=block_by,
+        dtype=x_b.dtype,
+    )
+    if not _guard.kernel_enabled("sce_gather", interpret=interpret):
+        return _ref_path()
     return _sce_prefetch.sce_gather_plse(
         x_b, y, idx_y, tgt_b, cand_ids, block_bx, block_by, interpret,
         logit_softcap,
@@ -204,6 +303,12 @@ def fused_lse(
     if interpret is None:
         interpret = _interpret_default()
     if interpret and _inside_shard_map(x, y):
+        return _ref.fused_lse_ref(x, y)
+    block_n, block_c = _guard.checked_blocks(
+        "fused_ce", rows=x.shape[0], cols=y.shape[0], d=x.shape[-1],
+        block_rows=block_n, block_cols=block_c, dtype=x.dtype,
+    )
+    if not _guard.kernel_enabled("fused_ce", interpret=interpret):
         return _ref.fused_lse_ref(x, y)
     return _fused_ce.fused_lse(x, y, block_n, block_c, interpret)
 
@@ -221,6 +326,12 @@ def fused_ce_loss(
     if interpret is None:
         interpret = _interpret_default()
     if interpret and _inside_shard_map(x, y):
+        return _ref.fused_ce_loss_ref(x, y, targets)
+    block_n, block_c = _guard.checked_blocks(
+        "fused_ce", rows=x.shape[0], cols=y.shape[0], d=x.shape[-1],
+        block_rows=block_n, block_cols=block_c, dtype=x.dtype,
+    )
+    if not _guard.kernel_enabled("fused_ce", interpret=interpret):
         return _ref.fused_ce_loss_ref(x, y, targets)
     return _fused_ce.fused_ce_loss(x, y, targets, block_n, block_c, interpret)
 
@@ -245,6 +356,14 @@ def linear_ce_loss(
     if interpret is None:
         interpret = _interpret_default()
     if interpret and _inside_shard_map(x, w):
+        return _ref.linear_ce_loss_ref(
+            x, w, targets, logit_softcap=logit_softcap, chunk=block_c
+        )
+    block_n, block_c = _guard.checked_blocks(
+        "linear_sce", rows=x.shape[0], cols=w.shape[0], d=x.shape[-1],
+        block_rows=block_n, block_cols=block_c, dtype=x.dtype,
+    )
+    if not _guard.kernel_enabled("linear_sce", interpret=interpret):
         return _ref.linear_ce_loss_ref(
             x, w, targets, logit_softcap=logit_softcap, chunk=block_c
         )
@@ -284,14 +403,24 @@ def eval_fused(
     pass it via ``tgt_scores``."""
     if interpret is None:
         interpret = _interpret_default()
-    traced_offset = not isinstance(id_offset, int)
-    if traced_offset or (interpret and _inside_shard_map(x, y)):
+
+    def _ref_path():
         return _ref.eval_fused_ref(
             x, y, targets, k,
             tgt_scores=tgt_scores, chunk=block_c, c_lo=c_lo, c_hi=c_hi,
             id_offset=id_offset, logit_softcap=logit_softcap,
             with_lse=with_lse,
         )
+
+    traced_offset = not isinstance(id_offset, int)
+    if traced_offset or (interpret and _inside_shard_map(x, y)):
+        return _ref_path()
+    block_b, block_c = _guard.checked_blocks(
+        "eval_fused", rows=x.shape[0], cols=y.shape[0], d=x.shape[-1],
+        block_rows=block_b, block_cols=block_c, dtype=x.dtype, k=k,
+    )
+    if not _guard.kernel_enabled("eval_fused", interpret=interpret):
+        return _ref_path()
     return _eval_fused.eval_fused(
         x, y, targets, k,
         tgt_scores=tgt_scores, block_b=block_b, block_c=block_c,
@@ -322,6 +451,14 @@ def eval_tgt_gather(
         interpret = _interpret_default()
     traced_offset = not isinstance(id_offset, int)
     if traced_offset or (interpret and _inside_shard_map(x, y)):
+        return _ref.eval_tgt_gather_ref(
+            x, y, targets, chunk=block_c, id_offset=id_offset
+        )
+    block_b, block_c = _guard.checked_blocks(
+        "eval_fused", rows=x.shape[0], cols=y.shape[0], d=x.shape[-1],
+        block_rows=block_b, block_cols=block_c, dtype=x.dtype,
+    )
+    if not _guard.kernel_enabled("eval_fused", interpret=interpret):
         return _ref.eval_tgt_gather_ref(
             x, y, targets, chunk=block_c, id_offset=id_offset
         )
@@ -357,12 +494,22 @@ def eval_topk(
     )
     if interpret is None:
         interpret = _interpret_default()
-    traced_offset = not isinstance(id_offset, int)
-    if traced_offset or (interpret and _inside_shard_map(x, y)):
+
+    def _ref_path():
         return _ref.eval_topk_ref(
             x, y, tgt_scores, k,
             chunk=block_c, c_lo=c_lo, c_hi=c_hi, id_offset=id_offset,
         )
+
+    traced_offset = not isinstance(id_offset, int)
+    if traced_offset or (interpret and _inside_shard_map(x, y)):
+        return _ref_path()
+    block_b, block_c = _guard.checked_blocks(
+        "eval_topk", rows=x.shape[0], cols=y.shape[0], d=x.shape[-1],
+        block_rows=block_b, block_cols=block_c, dtype=x.dtype, k=k,
+    )
+    if not _guard.kernel_enabled("eval_topk", interpret=interpret):
+        return _ref_path()
     return _eval_topk.eval_topk(
         x, y, tgt_scores, k,
         block_b=block_b, block_c=block_c,
@@ -394,6 +541,14 @@ def eval_tgt_scores(
         interpret = _interpret_default()
     traced_offset = not isinstance(id_offset, int)
     if traced_offset or (interpret and _inside_shard_map(x, y)):
+        return _ref.eval_tgt_scores_ref(
+            x, y, targets, chunk=block_c, id_offset=id_offset
+        )
+    block_b, block_c = _guard.checked_blocks(
+        "eval_topk", rows=x.shape[0], cols=y.shape[0], d=x.shape[-1],
+        block_rows=block_b, block_cols=block_c, dtype=x.dtype,
+    )
+    if not _guard.kernel_enabled("eval_topk", interpret=interpret):
         return _ref.eval_tgt_scores_ref(
             x, y, targets, chunk=block_c, id_offset=id_offset
         )

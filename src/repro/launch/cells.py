@@ -81,12 +81,12 @@ def _ns(mesh, spec_tree):
 def _metrics_shardings(mesh):
     # Train steps return the guarded-update metrics dict
     # (launch/steps.py::_apply_update_guarded): per-step loss, the
-    # on-device skip flag, and the global grad norm — all scalars.
-    return {
-        "loss": replicated_sharding(mesh),
-        "skipped": replicated_sharding(mesh),
-        "grad_norm": replicated_sharding(mesh),
-    }
+    # on-device skip flag, the global grad norm, and — when the guard
+    # policy threads them — the per-kernel numerics sentinel counters.
+    # All scalars; a single replicated leaf is a jit out_shardings
+    # pytree PREFIX covering the whole dict, so the spec stays correct
+    # whether or not the optional "sentinels" subtree is present.
+    return replicated_sharding(mesh)
 
 
 def _abs_params(init_fn):

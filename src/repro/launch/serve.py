@@ -51,6 +51,7 @@ import argparse
 import bisect
 import contextlib
 import dataclasses
+import sys
 import threading
 import time
 from collections import deque
@@ -73,6 +74,14 @@ class ServerOverloadedError(RuntimeError):
     """Backpressure rejection: the bounded queue is full, the server is
     closed, or the serve worker failed mid-batch. The request was NOT
     served — explicitly, never silently dropped."""
+
+
+class ServerNotReadyError(RuntimeError):
+    """Readiness rejection: the server has not passed its conformance
+    readiness gate (``kernels/guard`` canaries for the serve kernel on
+    this backend). Distinct from :class:`ServerOverloadedError` — this
+    is a startup/health condition, not load; retrying without fixing
+    or re-running conformance (``refresh_readiness``) will not help."""
 
 
 # ---------------------------------------------------------------------------
@@ -229,6 +238,11 @@ class RetrievalServer:
         random-init smoke path.
     mesh : optional ``Mesh`` — catalog on ``"model"``, requests on the
         data axes. ``None`` = single device.
+    defer_readiness : skip the constructor's conformance readiness gate
+        (``refresh_readiness``) — async submits then raise
+        ``ServerNotReadyError`` until the gate is run and passes. Used
+        by the fault-injection drills and by operators who want to run
+        the gate on their own schedule.
     """
 
     def __init__(self, arch_name: str = "sasrec-sce", *,
@@ -236,7 +250,8 @@ class RetrievalServer:
                  degraded_top_k: Optional[int] = None, queue_size: int = 64,
                  deadline_s: Optional[float] = None,
                  ckpt_dir: Optional[str] = None, mesh=None,
-                 seed: int = 0, block_c: int = 512):
+                 seed: int = 0, block_c: int = 512,
+                 defer_readiness: bool = False):
         self.arch = get_arch(arch_name)
         assert self.arch.family == "seqrec", "serve.py serves seqrec archs"
         self.cfg = self.arch.make_smoke_config()
@@ -286,6 +301,14 @@ class RetrievalServer:
         self.served = 0
         self.degraded_served = 0
         self.rejected = 0
+
+        # Conformance readiness gate (kernels/guard): async submits are
+        # rejected with ServerNotReadyError until the serve kernel's
+        # canaries pass on this backend (skipped under policy "off").
+        self._ready = False
+        self.readiness_error: Optional[str] = None
+        if not defer_readiness:
+            self.refresh_readiness()
 
     # -- params / compilation ---------------------------------------------
     def _ctx(self):
@@ -342,6 +365,65 @@ class RetrievalServer:
             vals, ids = fn(self.params, tokens)
         return np.asarray(vals), np.asarray(ids)
 
+    # -- readiness / health -------------------------------------------------
+    def refresh_readiness(self) -> bool:
+        """Run (or fetch) the conformance verdict for the serve kernel
+        and update the readiness flag — the startup gate, and the hook
+        a post-fix operator calls (after ``guard.clear_verdicts``) to
+        re-admit traffic. Policy ``off`` skips the gate entirely."""
+        from repro.kernels import guard
+
+        if guard.policy() == "off":
+            self._ready = True
+            self.readiness_error = None
+            return True
+        v = guard.verdict_for("mips_topk")
+        if v.passed:
+            self._ready = True
+            self.readiness_error = None
+        else:
+            self._ready = False
+            self.readiness_error = (
+                f"serve kernel 'mips_topk' failed {v.n_fail}/"
+                f"{v.n_fail + v.n_pass} conformance canaries on backend "
+                f"{v.backend} (interpret={v.interpret}): "
+                + "; ".join(v.failures)
+            )
+        return self._ready
+
+    @property
+    def ready(self) -> bool:
+        return self._ready
+
+    def health(self) -> Dict[str, Any]:
+        """JSON-ready liveness/readiness snapshot: the readiness flag
+        (+ why not, when gated), guard policy, queue depth, worker
+        liveness, serve counters and the full per-(backend, kernel)
+        conformance verdict table."""
+        from repro.kernels import guard
+
+        with self._cond:
+            queue_depth = len(self._queue)
+            worker_alive = (
+                self._worker is not None and self._worker.is_alive()
+            )
+            closed = self._closed
+        return {
+            "ready": self._ready,
+            "readiness_error": self.readiness_error,
+            "guard_policy": guard.policy(),
+            "closed": closed,
+            "queue_depth": queue_depth,
+            "queue_size": self.queue_size,
+            "worker_alive": worker_alive,
+            "served": self.served,
+            "degraded_served": self.degraded_served,
+            "rejected": self.rejected,
+            "compile_count": self.compile_count,
+            "cache_misses": self.cache_misses,
+            "conformance": guard.verdict_table(),
+        }
+
     # -- synchronous bulk path --------------------------------------------
     def score(self, histories: np.ndarray):
         """Bulk-serve ``(n, max_len)`` histories synchronously (the
@@ -368,7 +450,9 @@ class RetrievalServer:
                deadline_s: Optional[float] = None) -> Request:
         """Enqueue one ``(max_len,)`` history; returns a :class:`Request`
         handle. Raises ``ServerOverloadedError`` immediately when the
-        bounded queue is full or the server is closed."""
+        bounded queue is full or the server is closed, and
+        ``ServerNotReadyError`` when the conformance readiness gate has
+        not passed (``refresh_readiness``)."""
         history = np.asarray(history, np.int32)
         if history.shape != (self.cfg.max_len,):
             raise ValueError(
@@ -381,6 +465,13 @@ class RetrievalServer:
             if self._closed:
                 self.rejected += 1
                 raise ServerOverloadedError("server is closed")
+            if not self._ready:
+                self.rejected += 1
+                raise ServerNotReadyError(
+                    "server has not passed its conformance readiness "
+                    "gate — " + (self.readiness_error or
+                                 "refresh_readiness() was never run")
+                )
             if len(self._queue) >= self.queue_size:
                 self.rejected += 1
                 raise ServerOverloadedError(
@@ -487,6 +578,13 @@ def main() -> None:
                     if args.deadline_ms is not None else None),
         ckpt_dir=args.ckpt_dir,
     )
+    health = server.health()
+    n_canary = sum(v["n_pass"] + v["n_fail"] for v in health["conformance"])
+    print(f"readiness: ready={health['ready']} "
+          f"(guard={health['guard_policy']}, {n_canary} canaries run)")
+    if not health["ready"]:
+        print(f"NOT READY: {health['readiness_error']}")
+        sys.exit(3)
     data = SequenceDataset(SeqDataConfig(
         n_items=server.cfg.n_items,
         seq_len=server.cfg.max_len,

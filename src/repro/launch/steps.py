@@ -63,7 +63,7 @@ def _pop_loss_cap(batch):
 
 
 def _apply_update_guarded(opt_update, loss, grads, params, opt_state,
-                          loss_cap=None):
+                          loss_cap=None, sentinels=None):
     """Optimizer update gated on step health (DESIGN.md §8).
 
     ``ok`` = loss finite AND global grad norm finite AND (when a cap is
@@ -71,9 +71,11 @@ def _apply_update_guarded(opt_update, loss, grads, params, opt_state,
     kept bit-identical (the step counter does not advance — a skipped
     step never happened as far as schedules/moments are concerned).
     Surfaced metrics: ``loss``, ``skipped`` (the on-device skip
-    decision), ``grad_norm`` — the host-side divergence guard keys on
-    ``skipped`` rather than re-deriving finiteness from a float round
-    trip."""
+    decision), ``grad_norm``, and (when the loss threaded them) the
+    guard's per-kernel ``sentinels`` counter dict — the host-side
+    divergence guard keys on ``skipped`` rather than re-deriving
+    finiteness from a float round trip, and on a strike the sentinels
+    name WHICH kernel went non-finite (kernels/guard/sentinels.py)."""
     gnorm = global_norm(grads)
     ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
     if loss_cap is not None:
@@ -83,6 +85,8 @@ def _apply_update_guarded(opt_update, loss, grads, params, opt_state,
         lambda n, o: jnp.where(ok, n, o), new, old
     )
     metrics = {"loss": loss, "skipped": ~ok, "grad_norm": gnorm}
+    if sentinels:
+        metrics["sentinels"] = dict(sentinels)
     return keep(new_params, params), keep(new_opt, opt_state), metrics
 
 
@@ -119,6 +123,16 @@ def build_sce_config(
     )
 
 
+# Which kernel a loss name's sentinel counters should blame — the
+# kernel group (kernels/guard/conformance.py registry key) the loss
+# dispatches to. Names outside the map use the loss name itself.
+_SENTINEL_KERNEL = {
+    "sce": "sce_bucket",
+    "ce_fused": "fused_ce",
+    "ce_fused_linear": "linear_sce",
+}
+
+
 def _vocab_loss(
     x, y, targets, valid, key, *, loss_name, sce_cfg, sce_mode, mesh,
     logit_softcap: Optional[float] = None,
@@ -133,46 +147,70 @@ def _vocab_loss(
     variant that supports it: the SCE paths carry it inside
     ``sce_cfg``; ``ce_chunked`` caps inside its streaming scan;
     ``ce_fused_linear`` caps inside the Pallas tile.
+
+    Returns ``(loss, sentinels)`` — the guard's on-device numerics
+    counter dict (``kernels/guard/sentinels.py``), keyed by the kernel
+    the loss dispatched to, empty under guard policy ``off``.
     """
+    from repro.kernels import guard
+
     if loss_name == "sce":
         if sce_mode in ("exact", "union") and mesh is not None:
-            return sce_loss_sharded(
+            loss = sce_loss_sharded(
                 x, y, targets, key=key, cfg=sce_cfg, mesh=mesh,
                 valid_mask=valid, mode=sce_mode,
             )
-        return sce_loss(
-            x, y, targets, key=key, cfg=sce_cfg, valid_mask=valid
-        )
-    if loss_name == "ce_chunked":
-        loss, _ = ce_chunked(
+        else:
+            loss = sce_loss(
+                x, y, targets, key=key, cfg=sce_cfg, valid_mask=valid
+            )
+        aux = {}
+    elif loss_name == "ce_chunked":
+        loss, aux = ce_chunked(
             x, y, targets, valid_mask=valid, logit_softcap=logit_softcap
         )
-        return loss
-    if loss_name == "ce_fused_linear":
+    elif loss_name == "ce_fused_linear":
         from repro.core.losses import ce_fused_linear
 
-        loss, _ = ce_fused_linear(
+        loss, aux = ce_fused_linear(
             x, y, targets, valid_mask=valid, logit_softcap=logit_softcap
         )
-        return loss
-    fn = make_loss(loss_name)
-    loss, _ = fn(x, y, targets, valid_mask=valid, key=key)
-    return loss
+    else:
+        fn = make_loss(loss_name)
+        loss, aux = fn(x, y, targets, valid_mask=valid, key=key)
+    if guard.policy() == "off":
+        return loss, {}
+    sentinels = aux.get("sentinels")
+    if sentinels is None:
+        sentinels = guard.loss_sentinels(
+            _SENTINEL_KERNEL.get(loss_name, loss_name), loss
+        )
+    return loss, sentinels
 
 
 def _accumulate_microbatches(
-    loss_and_grad_fn, params, batch, key, n_micro, accum_dtype=jnp.float32
+    loss_and_grad_fn, params, batch, key, n_micro, accum_dtype=jnp.float32,
+    *, with_aux=False,
 ):
     """lax.scan over microbatches; mean-accumulated grads in
-    ``accum_dtype`` (f32 default; bf16 for params-dominated giants)."""
+    ``accum_dtype`` (f32 default; bf16 for params-dominated giants).
 
-    def one(pb_key, mb):
-        mb_key = pb_key
-        loss, grads = loss_and_grad_fn(params, mb, mb_key)
-        return loss, grads
+    ``with_aux=False`` (legacy): the fn returns ``(loss, grads)``.
+    ``with_aux=True``: the fn returns ``(loss, aux, grads)`` where
+    ``aux`` is a dict of on-device counters (the guard's numerics
+    sentinels) summed across microbatches; the result is
+    ``(loss, aux, grads)``."""
+
+    def call(mb, mb_key):
+        out = loss_and_grad_fn(params, mb, mb_key)
+        if with_aux:
+            return out
+        loss, grads = out
+        return loss, {}, grads
 
     if n_micro == 1:
-        return one(key, batch)
+        loss, aux, grads = call(batch, key)
+        return (loss, aux, grads) if with_aux else (loss, grads)
 
     stacked = jax.tree.map(
         lambda a: a.reshape((n_micro, a.shape[0] // n_micro) + a.shape[1:]),
@@ -182,23 +220,26 @@ def _accumulate_microbatches(
     def body(carry, inp):
         acc_loss, acc_grads = carry
         mb, i = inp
-        loss, grads = loss_and_grad_fn(params, mb, jax.random.fold_in(key, i))
+        loss, aux, grads = call(mb, jax.random.fold_in(key, i))
         acc_grads = jax.tree.map(
             lambda a, g: a + g.astype(accum_dtype) / n_micro,
             acc_grads,
             grads,
         )
-        return (acc_loss + loss / n_micro, acc_grads), None
+        return (acc_loss + loss / n_micro, acc_grads), aux
 
     zero_grads = jax.tree.map(
         lambda p: jnp.zeros(p.shape, accum_dtype), params
     )
-    (loss, grads), _ = jax.lax.scan(
+    (loss, grads), auxs = jax.lax.scan(
         body,
         (jnp.zeros((), jnp.float32), zero_grads),
         (stacked, jnp.arange(n_micro)),
     )
     grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+    if with_aux:
+        aux = jax.tree.map(lambda a: jnp.sum(a, axis=0), auxs)
+        return loss, aux, grads
     return loss, grads
 
 
@@ -252,7 +293,7 @@ def make_lm_train_step(
             hidden, aux = tf_lib.forward(p, cfg, mb["tokens"])
             x = hidden.reshape(-1, hidden.shape[-1])
             y = tf_lib.output_embedding(p, cfg)  # padded rows = phantom negs
-            loss = _vocab_loss(
+            loss, sentinels = _vocab_loss(
                 x,
                 y,
                 mb["targets"].reshape(-1),
@@ -264,20 +305,25 @@ def make_lm_train_step(
                 mesh=mesh,
                 logit_softcap=cfg.final_softcap,
             )
-            return loss + aux
-        return jax.value_and_grad(loss_fn)(params)
+            return loss + aux, sentinels
+        (loss, sentinels), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params)
+        return loss, sentinels, grads
 
     accum_dtype = jnp.dtype(arch.accum_dtype)
 
     def train_step(params, opt_state, batch, key):
         batch, loss_cap = _pop_loss_cap(batch)
-        loss, grads = _accumulate_microbatches(
-            loss_and_grad, params, batch, key, n_micro, accum_dtype
+        loss, sentinels, grads = _accumulate_microbatches(
+            loss_and_grad, params, batch, key, n_micro, accum_dtype,
+            with_aux=True,
         )
         # (int8 error-feedback compression, if enabled, lives inside the
         # wrapped optimizer — see optim.with_error_feedback_compression)
         return _apply_update_guarded(
-            opt_update, loss, grads, params, opt_state, loss_cap
+            opt_update, loss, grads, params, opt_state, loss_cap,
+            sentinels=sentinels,
         )
 
     return train_step, (opt_init, opt_update), sce_cfg
@@ -357,15 +403,19 @@ def make_seqrec_train_step(
                 logit_softcap=getattr(cfg, "final_softcap", None),
             )
 
-        return jax.value_and_grad(loss_fn)(params)
+        (loss, sentinels), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params)
+        return loss, sentinels, grads
 
     def train_step(params, opt_state, batch, key):
         batch, loss_cap = _pop_loss_cap(batch)
-        loss, grads = _accumulate_microbatches(
-            loss_and_grad, params, batch, key, n_micro
+        loss, sentinels, grads = _accumulate_microbatches(
+            loss_and_grad, params, batch, key, n_micro, with_aux=True
         )
         return _apply_update_guarded(
-            opt_update, loss, grads, params, opt_state, loss_cap
+            opt_update, loss, grads, params, opt_state, loss_cap,
+            sentinels=sentinels,
         )
 
     return train_step, (opt_init, opt_update), sce_cfg

@@ -74,6 +74,7 @@ from repro.data import (
     ShardedCursor,
     batched_molecules,
 )
+from repro.kernels import guard as kguard
 from repro.launch import steps as steps_lib
 from repro.launch.elastic import (
     EXIT_PREEMPTED,
@@ -222,6 +223,7 @@ def train(
     guard_factor: float = 100.0,
     metrics_file: Optional[str] = None,
     chaos_nan_at: Optional[int] = None,
+    guard_policy: Optional[str] = None,
 ) -> Dict[str, Any]:
     """Run a real (smoke-scale) training loop; returns final metrics.
 
@@ -229,8 +231,16 @@ def train(
     uses: at that host step the params are multiplied by NaN *once*,
     which must be survived (update skipped on-device, strikes, rollback
     to the last verified checkpoint) — never shipped.
+
+    ``guard_policy`` (``--guard``) sets the process-wide kernel-guard
+    policy (``repro.kernels.guard``): ``off`` / ``warn`` (default) /
+    ``strict``. Under warn/strict the loss threads per-kernel numerics
+    sentinels into the step metrics, so a divergence-guard strike names
+    WHICH kernel went non-finite.
     """
     arch = get_arch(arch_name)
+    if guard_policy is not None:
+        kguard.set_policy(guard_policy)
     if n_hosts > 1 and arch.family == "gnn":
         raise ValueError("--n-hosts emulation needs a sharded dataset; "
                          "the gnn molecule stream has none")
@@ -318,13 +328,16 @@ def train(
     metrics_fh = open(metrics_file, "a") if metrics_file else None
     chaos_fired = False
 
-    def record(step, loss, skipped, grad_norm):
+    def record(step, loss, skipped, grad_norm, sentinels=None):
         if metrics_fh is None:
             return
-        metrics_fh.write(json.dumps({
+        row = {
             "step": step, "loss": loss, "skipped": skipped,
             "grad_norm": grad_norm,
-        }) + "\n")
+        }
+        if sentinels:
+            row["sentinels"] = sentinels
+        metrics_fh.write(json.dumps(row) + "\n")
         metrics_fh.flush()
 
     def save_state(blocking: bool):
@@ -382,20 +395,31 @@ def train(
             loss = float(metrics["loss"])
             skipped = bool(metrics.get("skipped", False))
             grad_norm = float(metrics.get("grad_norm", np.nan))
+            # Tripped numerics sentinels (kernels/guard): nonzero
+            # per-kernel counters naming what went non-finite on-device.
+            tripped = {
+                k: int(v)
+                for k, v in metrics.get("sentinels", {}).items()
+                if int(v)
+            }
             state.cursor = new_cursor
             state.step = step
             dt = time.time() - t0
             losses.append(loss)
             times.append(dt)
-            record(step, loss, skipped, grad_norm)
+            record(step, loss, skipped, grad_norm, tripped)
 
             verdict = guard.observe(loss, skipped=skipped)
             if verdict != "ok":
                 skipped_steps += 1
+                blame = (
+                    f" (sentinels: {kguard.describe_sentinels(tripped)})"
+                    if tripped else ""
+                )
                 print(f"[guard] step {step}: loss {loss:.4g} "
                       f"grad_norm {grad_norm:.4g} — update skipped "
                       f"(strike {guard.strikes or guard.max_strikes}"
-                      f"/{guard.max_strikes})")
+                      f"/{guard.max_strikes}){blame}")
             if verdict == "rollback":
                 if mgr is None:
                     raise RuntimeError(
@@ -502,6 +526,11 @@ def main() -> None:
     ap.add_argument("--chaos-nan-at", type=int,
                     help="fault injection: poison params with NaN at "
                          "this step once (divergence drill)")
+    ap.add_argument("--guard", choices=list(kguard.POLICIES),
+                    help="kernel-guard policy (default: REPRO_GUARD env "
+                         "or 'warn'): preflight block checks, "
+                         "conformance-canary degradation, numerics "
+                         "sentinels")
     ap.add_argument("--log-every", type=int, default=10,
                     help="print a progress line every N steps")
     ap.add_argument("--eval-every", type=int, default=0,
@@ -532,6 +561,7 @@ def main() -> None:
         guard_factor=args.guard_factor,
         metrics_file=args.metrics_file,
         chaos_nan_at=args.chaos_nan_at,
+        guard_policy=args.guard,
         log_every=args.log_every,
         eval_every=args.eval_every,
         eval_users=args.eval_users,

@@ -363,3 +363,57 @@ def test_pareto_alpha_beta_json_schema(tmp_path):
     assert {(r["alpha"], r["beta"]) for r in rows} == {
         (a, b) for a in (1.0, 2.0, 4.0) for b in (1.0, 4.0)
     }
+
+
+def test_guard_json_schema(tmp_path):
+    """BENCH_guard.json: the kernel-guardrail health snapshot (ISSUE 10)
+    — one canary-verdict row per kernel with ``canary_failures`` pinned
+    to ZERO, the preflight sweep row with ``preflight_uncaught`` pinned
+    to ZERO (every config repairs or raises the structured error), and
+    the sentinel probe row with detection complete and zero false
+    positives on a healthy loss."""
+    doc = _run_bench(tmp_path, "benchmarks.kernel_bench", "--mode", "guard")
+    assert set(doc) == {"mode", "rows", "derived"}
+    assert doc["mode"] == "guard"
+    assert isinstance(doc["derived"], str)
+    assert "canary_failures=0" in doc["derived"]
+    rows = {r["label"]: r for r in doc["rows"]}
+    kernel_rows = {
+        k: v for k, v in rows.items()
+        if k not in ("preflight", "sentinels")
+    }
+    assert set(kernel_rows) == {
+        "sce_bucket", "sce_gather", "mips_topk", "fused_ce",
+        "linear_sce", "eval_fused", "eval_topk",
+    }
+    spec = {
+        "label": str,
+        "backend": str,
+        "interpret": bool,
+        "canaries": numbers.Integral,
+        "canary_failures": numbers.Integral,
+    }
+    for name, row in kernel_rows.items():
+        _assert_row(row, spec, f"guard[{name}]")
+        assert row["canaries"] >= 1
+        assert row["canary_failures"] == 0, row
+    pf = rows["preflight"]
+    _assert_row(pf, {
+        "checked": numbers.Integral,
+        "repaired": numbers.Integral,
+        "rejected_structured": numbers.Integral,
+        "preflight_uncaught": numbers.Integral,
+    }, "guard[preflight]")
+    assert pf["checked"] >= pf["repaired"] + pf["rejected_structured"]
+    assert pf["rejected_structured"] >= 1  # the grid includes illegal cases
+    assert pf["preflight_uncaught"] == 0, pf
+    st = rows["sentinels"]
+    _assert_row(st, {
+        "nonfinite_seeded": numbers.Integral,
+        "nonfinite_detected": numbers.Integral,
+        "sentinel_misses": numbers.Integral,
+        "sentinel_false_positives": numbers.Integral,
+    }, "guard[sentinels]")
+    assert st["nonfinite_detected"] == st["nonfinite_seeded"] >= 1
+    assert st["sentinel_misses"] == 0
+    assert st["sentinel_false_positives"] == 0

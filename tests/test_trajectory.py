@@ -187,3 +187,30 @@ def test_labelled_pareto_regression_fails():
     assert T.compare(payload(0.002), payload(0.002), "f") == []
     fails = T.compare(payload(0.004), payload(0.002), "f")
     assert fails and "sce@1000000" in fails[0]
+
+
+def _guard_payload(failures=0, uncaught=0):
+    return {
+        "mode": "guard", "derived": "x",
+        "rows": [
+            {"label": "mips_topk", "backend": "cpu", "interpret": True,
+             "canaries": 2, "canary_failures": failures},
+            {"label": "preflight", "checked": 49, "repaired": 28,
+             "rejected_structured": 14, "preflight_uncaught": uncaught},
+            {"label": "sentinels", "nonfinite_seeded": 3,
+             "nonfinite_detected": 3, "sentinel_misses": 0,
+             "sentinel_false_positives": 0},
+        ],
+    }
+
+
+def test_guard_counts_gated_from_zero_baseline():
+    """A canary failure or an uncaught preflight exception appearing in
+    CI must fail even though % drift off a zero baseline is undefined."""
+    base = _guard_payload()
+    assert T.compare(_guard_payload(), base, "f") == []
+    fails = T.compare(_guard_payload(failures=1), base, "f")
+    assert fails and "mips_topk.canary_failures" in fails[0]
+    assert "zero baseline" in fails[0]
+    fails = T.compare(_guard_payload(uncaught=2), base, "f")
+    assert fails and "preflight.preflight_uncaught" in fails[0]
